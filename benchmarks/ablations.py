@@ -1,0 +1,72 @@
+"""Beyond-paper ablations of the wireless PHY/MAC design space:
+
+- wireless medium: crossbar / matching / single-channel (strict §III.B PHY)
+- MAC: control-packet (partial packets) vs token (whole packets) [7]
+- sleepy receivers on/off [17]
+- interposer wire budget: 1 vs 2 parallel links per boundary pair [2]
+"""
+from repro.core.constants import Fabric, MacMode, PhyParams, SimParams
+from repro.core.sweep import run_point
+
+from benchmarks.common import SIM, emit, gain, reduction
+
+
+def main() -> None:
+    emit("ablation,variant,thr,lat,energy_pj_pkt")
+    base = run_point(4, 4, Fabric.WIRELESS, load=1.0, sim=SIM)
+    emit(f"ablation,crossbar(default),{base.throughput:.4f},"
+         f"{base.avg_pkt_latency:.1f},{base.avg_pkt_energy_pj:.0f}")
+    for name, phy in [
+        ("matching", PhyParams(wireless_medium="matching")),
+        ("single_channel_strict",
+         PhyParams(wireless_medium="single", wireless_flit_cycles=5)),
+    ]:
+        m = run_point(4, 4, Fabric.WIRELESS, load=1.0, sim=SIM, phy=phy)
+        emit(f"ablation,{name},{m.throughput:.4f},{m.avg_pkt_latency:.1f},"
+             f"{m.avg_pkt_energy_pj:.0f}")
+
+    tok = run_point(4, 4, Fabric.WIRELESS, load=1.0,
+                    sim=SimParams(cycles=SIM.cycles, warmup=SIM.warmup,
+                                  mac=MacMode.TOKEN))
+    emit(f"ablation,token_mac,{tok.throughput:.4f},{tok.avg_pkt_latency:.1f},"
+         f"{tok.avg_pkt_energy_pj:.0f}")
+    emit(f"ablation.derived,ctrl_mac_thr_gain_pct,"
+         f"{gain(base.throughput, tok.throughput):.1f}")
+
+    nosleep = run_point(4, 4, Fabric.WIRELESS, load=0.1,
+                        sim=SimParams(cycles=SIM.cycles, warmup=SIM.warmup,
+                                      sleepy_rx=False))
+    sleep = run_point(4, 4, Fabric.WIRELESS, load=0.1, sim=SIM)
+    emit(f"ablation.derived,sleepy_rx_energy_saving_pct,"
+         f"{reduction(sleep.avg_pkt_energy_pj, nosleep.avg_pkt_energy_pj):.1f}")
+
+    phy2 = PhyParams(interposer_links_per_pair=2)
+    for nc in (4, 8):
+        mw = run_point(nc, 4, Fabric.WIRELESS, load=1.0, sim=SIM, phy=phy2)
+        mi = run_point(nc, 4, Fabric.INTERPOSER, load=1.0, sim=SIM, phy=phy2)
+        emit(f"ablation,interposer_x2_{nc}C4M_bw_gain_pct,"
+             f"{gain(mw.throughput, mi.throughput):.1f},,")
+
+    # beyond-paper: WI deployment density (§III.A: "the number of clusters
+    # per chip will depend on the WI density") — 1C4M with 4/8/16-core
+    # clusters (16/8/4 chip WIs)
+    from repro.core import simulator, traffic
+    from repro.core.routing import compute_routing
+    from repro.core.topology import build_xcym
+    from repro.core.metrics import compute_metrics
+    for cluster in (4, 8, 16, 32):
+        topo = build_xcym(1, 4, Fabric.WIRELESS, wi_cluster_cores=cluster)
+        if topo.n_wi > 16:
+            continue                      # simulator WI cap
+        rt = compute_routing(topo)
+        tt = traffic.uniform_random(topo, 1.0, 0.2, SIM.cycles, 64)
+        ps = simulator.pack(topo, rt, tt, PhyParams(), SIM)
+        st = simulator.run(ps)
+        m = compute_metrics(ps, st, f"density_{cluster}", tt.offered_load)
+        emit(f"ablation,wi_density_1per{cluster}cores_1C4M,"
+             f"{m.throughput:.4f},{m.avg_pkt_latency:.1f},"
+             f"{m.avg_pkt_energy_pj:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Shared benchmark plumbing: CSV emission + paper-target checks."""
+from __future__ import annotations
+
+import sys
+import time
+
+from repro.core.constants import Fabric, SimParams
+
+FABRICS = [Fabric.SUBSTRATE, Fabric.INTERPOSER, Fabric.WIRELESS]
+SIM = SimParams(cycles=10_000, warmup=1_000)   # paper §IV
+
+
+def emit(row: str) -> None:
+    print(row, flush=True)
+
+
+def gain(new: float, base: float) -> float:
+    """Percentage improvement of `new` over `base` (higher better)."""
+    return 100.0 * (new / base - 1.0)
+
+
+def reduction(new: float, base: float) -> float:
+    """Percentage reduction of `new` vs `base` (lower better)."""
+    return 100.0 * (1.0 - new / base)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.perf_counter() - self.t0

@@ -1,0 +1,32 @@
+"""Fig. 2: peak achievable bandwidth/core + average packet energy, uniform
+random traffic at saturation, 4C4M, 20% memory accesses."""
+from repro.core.constants import Fabric
+from repro.core.sweep import run_point
+
+from benchmarks.common import FABRICS, SIM, emit, gain, reduction
+
+
+def main() -> None:
+    emit("fig2,fabric,bw_gbps_core,avg_pkt_energy_pj,thr_flits_cyc_core")
+    results = {}
+    for f in FABRICS:
+        m = run_point(4, 4, f, load=1.0, p_mem=0.2, sim=SIM)
+        results[f] = m
+        emit(f"fig2,{f.name},{m.bw_gbps_core:.3f},{m.avg_pkt_energy_pj:.0f},"
+             f"{m.throughput:.4f}")
+    w, i, s = (results[Fabric.WIRELESS], results[Fabric.INTERPOSER],
+               results[Fabric.SUBSTRATE])
+    emit(f"fig2.check,wireless_highest_bw,"
+         f"{w.bw_gbps_core > i.bw_gbps_core > s.bw_gbps_core}")
+    emit(f"fig2.check,wireless_lowest_energy,"
+         f"{w.avg_pkt_energy_pj < i.avg_pkt_energy_pj < s.avg_pkt_energy_pj}")
+    emit(f"fig2.derived,bw_gain_vs_interposer_pct,"
+         f"{gain(w.bw_gbps_core, i.bw_gbps_core):.1f}")
+    emit(f"fig2.derived,energy_gain_vs_interposer_pct,"
+         f"{reduction(w.avg_pkt_energy_pj, i.avg_pkt_energy_pj):.1f}")
+    emit(f"fig2.derived,energy_gain_vs_substrate_pct,"
+         f"{reduction(w.avg_pkt_energy_pj, s.avg_pkt_energy_pj):.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Fig. 3: average packet latency vs packet injection load, uniform random
+traffic, 4C4M."""
+from repro.core.constants import Fabric
+from repro.core.sweep import run_point
+
+from benchmarks.common import FABRICS, SIM, emit
+
+LOADS = [0.01, 0.02, 0.05, 0.10, 0.15, 0.20, 0.30]
+
+
+def main() -> None:
+    emit("fig3,fabric,load,avg_pkt_latency_cycles,throughput")
+    low = {}
+    for f in FABRICS:
+        for load in LOADS:
+            m = run_point(4, 4, f, load=load, p_mem=0.2, sim=SIM)
+            emit(f"fig3,{f.name},{load},{m.avg_pkt_latency:.1f},"
+                 f"{m.throughput:.4f}")
+            if load == LOADS[0]:
+                low[f] = m.avg_pkt_latency
+    emit(f"fig3.check,wireless_lowest_latency,"
+         f"{low[Fabric.WIRELESS] < low[Fabric.INTERPOSER] < low[Fabric.SUBSTRATE]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Fig. 4: % gain in bandwidth and packet energy of the wireless multichip
+system vs the interposer baseline, as chip-to-chip traffic grows with
+disintegration (1C4M -> 4C4M -> 8C4M; off-chip traffic 20% -> 80% -> 90%)."""
+from repro.core.constants import Fabric
+from repro.core.sweep import run_point
+
+from benchmarks.common import SIM, emit, gain, reduction
+
+
+def main() -> None:
+    emit("fig4,config,off_chip_frac,bw_gain_pct,energy_gain_pct,"
+         "thr_wireless,thr_interposer")
+    off = {1: 0.20, 4: 0.80, 8: 0.90}
+    for nc in (1, 4, 8):
+        mw = run_point(nc, 4, Fabric.WIRELESS, load=1.0, p_mem=0.2, sim=SIM)
+        mi = run_point(nc, 4, Fabric.INTERPOSER, load=1.0, p_mem=0.2, sim=SIM)
+        bw = gain(mw.throughput, mi.throughput)
+        en = reduction(mw.avg_pkt_energy_pj, mi.avg_pkt_energy_pj)
+        emit(f"fig4,{nc}C4M,{off[nc]},{bw:.1f},{en:.1f},"
+             f"{mw.throughput:.4f},{mi.throughput:.4f}")
+    emit("fig4.paper,8C4M,0.90,11.0,37.0,,  # paper-reported gains")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Fig. 5: % gain in bandwidth and packet energy vs the interposer baseline
+as the memory-access fraction varies 20% -> 80% (4C4M)."""
+from repro.core.constants import Fabric
+from repro.core.sweep import run_point
+
+from benchmarks.common import SIM, emit, gain, reduction
+
+
+def main() -> None:
+    emit("fig5,p_mem,bw_gain_pct,energy_gain_pct,thr_wireless,thr_interposer")
+    gains = []
+    for pm in (0.2, 0.4, 0.6, 0.8):
+        mw = run_point(4, 4, Fabric.WIRELESS, load=1.0, p_mem=pm, sim=SIM)
+        mi = run_point(4, 4, Fabric.INTERPOSER, load=1.0, p_mem=pm, sim=SIM)
+        bw = gain(mw.throughput, mi.throughput)
+        en = reduction(mw.avg_pkt_energy_pj, mi.avg_pkt_energy_pj)
+        gains.append((bw, en))
+        emit(f"fig5,{pm},{bw:.1f},{en:.1f},"
+             f"{mw.throughput:.4f},{mi.throughput:.4f}")
+    emit(f"fig5.check,gains_stay_positive,"
+         f"{all(b > 0 and e > 0 for b, e in gains)}")
+    emit("fig5.paper,floors,10.0,35.0,,  # paper-reported asymptotic floors")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Fig. 6: % reduction in average packet latency and packet energy of 4C4M
+(Wireless) vs 4C4M (Interposer) under application-specific traffic
+(SynFull-style models of PARSEC/SPLASH2 benchmarks, DESIGN.md §7.2).
+
+The network is NOT saturated here (latency is the meaningful metric, §IV.D).
+"""
+from repro.core.constants import Fabric
+from repro.core.sweep import run_point
+from repro.core.traffic import APP_MODELS
+
+from benchmarks.common import SIM, emit, reduction
+
+
+def main() -> None:
+    emit("fig6,app,lat_reduction_pct,energy_reduction_pct,"
+         "lat_wireless,lat_interposer")
+    lat_red, en_red = [], []
+    for app in APP_MODELS:
+        mw = run_point(4, 4, Fabric.WIRELESS, load=1.0, app=app, sim=SIM)
+        mi = run_point(4, 4, Fabric.INTERPOSER, load=1.0, app=app, sim=SIM)
+        lr = reduction(mw.avg_pkt_latency, mi.avg_pkt_latency)
+        er = reduction(mw.avg_pkt_energy_pj, mi.avg_pkt_energy_pj)
+        lat_red.append(lr)
+        en_red.append(er)
+        emit(f"fig6,{app},{lr:.1f},{er:.1f},"
+             f"{mw.avg_pkt_latency:.1f},{mi.avg_pkt_latency:.1f}")
+    emit(f"fig6.derived,avg_latency_reduction_pct,"
+         f"{sum(lat_red)/len(lat_red):.1f}")
+    emit(f"fig6.derived,avg_energy_reduction_pct,"
+         f"{sum(en_red)/len(en_red):.1f}")
+    emit("fig6.paper,averages,54.0,45.0,,  # paper-reported averages")
+    emit(f"fig6.check,all_apps_improve,"
+         f"{all(l > 0 for l in lat_red) and all(e > 0 for e in en_red)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""§Roofline: per (arch x shape x mesh) three-term roofline table from the
+dry-run artifacts + WiMCS fabric energy pricing of the collective traffic.
+
+Reads experiments/dryrun_results.json (produced by repro.launch.dryrun).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+RESULTS = [("baseline", "experiments/dryrun_results.json"),
+           ("optimized", "experiments/dryrun_optimized.json")]
+
+ADVICE = {
+    "compute": "raise arithmetic intensity (larger per-chip tiles, fewer "
+               "remat passes)",
+    "memory": "fuse elementwise chains / shrink materialized intermediates "
+              "(SSD chunk size, flash blocks)",
+    "collective": "reshard to cut wire bytes (EP all-to-all dispatch, bf16 "
+                  "collectives, sequence-parallel residuals)",
+}
+
+
+def main() -> None:
+    for tag, path in RESULTS:
+        if not os.path.exists(path):
+            emit(f"roofline,{tag},missing {path} — run repro.launch.dryrun")
+            continue
+        with open(path) as f:
+            rows = json.load(f)
+        _table(tag, rows)
+
+
+def _table(tag: str, rows) -> None:
+    emit(f"roofline[{tag}],arch,shape,mesh,t_compute_ms,t_memory_ms,"
+         "t_collective_ms,bottleneck,useful_flop_ratio,roofline_fraction,"
+         "mem_GB_dev,wl_fabric_mJ,ici_fabric_mJ,advice")
+    for r in rows:
+        if r["status"].startswith("SKIP"):
+            emit(f"roofline[{tag}],{r['arch']},{r['shape']},{r['mesh']},"
+                 f"{r['status']},,,,,,,,")
+            continue
+        if r["status"] != "OK":
+            emit(f"roofline[{tag}],{r['arch']},{r['shape']},{r['mesh']},"
+                 "FAIL,,,,,,,,")
+            continue
+        fe = r["fabric_energy_mj"]
+        emit(f"roofline[{tag}],{r['arch']},{r['shape']},{r['mesh']},"
+             f"{r['t_compute_ms']:.2f},{r['t_memory_ms']:.2f},"
+             f"{r['t_collective_ms']:.2f},{r['bottleneck']},"
+             f"{r['useful_flop_ratio']:.3f},{r['roofline_fraction']:.3f},"
+             f"{r['mem_gb_per_dev']:.2f},"
+             f"{fe['wireless_inpackage']:.1f},{fe['ici_wireline']:.1f},"
+             f"\"{ADVICE[r['bottleneck']]}\"")
+    ok = [r for r in rows if r["status"] == "OK"]
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline_fraction"])
+        coll = max(ok, key=lambda r: r["t_collective_ms"])
+        train = [r for r in ok if r["shape"] == "train_4k"]
+        emit(f"roofline[{tag}].summary,cells_ok,{len(ok)}")
+        emit(f"roofline[{tag}].summary,worst_fraction,{worst['arch']}/"
+             f"{worst['shape']}/{worst['mesh']},"
+             f"{worst['roofline_fraction']:.4f}")
+        emit(f"roofline[{tag}].summary,most_collective_bound,{coll['arch']}/"
+             f"{coll['shape']}/{coll['mesh']},{coll['t_collective_ms']:.1f}ms")
+        if train:
+            best = max(train, key=lambda r: r["roofline_fraction"])
+            emit(f"roofline[{tag}].summary,best_train_fraction,"
+                 f"{best['arch']}/{best['mesh']},"
+                 f"{best['roofline_fraction']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Benchmark runner: one module per paper figure + ablations + roofline.
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [fig2 fig3 ... | all]
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (ablations, fig2_uniform, fig3_latency,
+                            fig4_cc_traffic, fig5_mc_traffic, fig6_apps,
+                            simspeed)
+    suites = {
+        "fig2": fig2_uniform.main,
+        "fig3": fig3_latency.main,
+        "fig4": fig4_cc_traffic.main,
+        "fig5": fig5_mc_traffic.main,
+        "fig6": fig6_apps.main,
+        "ablations": ablations.main,
+        "simspeed": simspeed.main,
+    }
+    try:
+        from benchmarks import roofline
+        suites["roofline"] = roofline.main
+    except ImportError:
+        pass
+
+    args = sys.argv[1:] or ["all"]
+    picked = list(suites) if args == ["all"] else args
+    for name in picked:
+        t0 = time.perf_counter()
+        print(f"=== {name} ===", flush=True)
+        suites[name]()
+        print(f"=== {name} done in {time.perf_counter()-t0:.1f}s ===",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Simulator performance microbenchmark: simulated cycles per second."""
+import time
+
+from repro.core import simulator, traffic
+from repro.core.constants import DEFAULT_PHY, Fabric, SimParams
+from repro.core.routing import compute_routing
+from repro.core.topology import build_xcym
+
+from benchmarks.common import emit
+
+
+def main() -> None:
+    topo = build_xcym(4, 4, Fabric.WIRELESS)
+    rt = compute_routing(topo)
+    sim = SimParams(cycles=10_000, warmup=1_000)
+    tt = traffic.uniform_random(topo, 0.3, 0.2, sim.cycles, 64, seed=0)
+    ps = simulator.pack(topo, rt, tt, DEFAULT_PHY, sim)
+    simulator.run(ps, cycles=100)            # compile
+    t0 = time.perf_counter()
+    simulator.run(ps)
+    dt = time.perf_counter() - t0
+    emit(f"simspeed,cycles_per_sec,{sim.cycles/dt:.0f}")
+    emit(f"simspeed,us_per_cycle,{dt/sim.cycles*1e6:.1f}")
+
+
+if __name__ == "__main__":
+    main()

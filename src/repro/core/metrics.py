@@ -1,0 +1,88 @@
+"""Post-run metric extraction (paper §IV definitions).
+
+- peak achievable bandwidth per core: bits successfully routed per core per
+  second at saturation (we report delivered flits/cycle/core * flit_bits *
+  clock).
+- average packet energy: total network energy / delivered packets, from the
+  simulator's *exact integer event counts* (link traversals per link, switch
+  traversals, control packets, receiver awake/asleep cycles) so no
+  floating-point accumulation error enters the energy numbers.
+- average packet latency: generation -> tail-ejection, packets born after
+  warm-up.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.constants import PhyParams, SimParams
+from repro.core.simulator import PackedSim, SimState
+
+
+@dataclasses.dataclass
+class Metrics:
+    name: str
+    offered_load: float        # flits/cycle/core
+    throughput: float          # delivered flits/cycle/core
+    bw_gbps_core: float        # bits/s/core
+    avg_pkt_latency: float     # cycles
+    avg_pkt_energy_pj: float   # pJ / packet
+    energy_pj_bit: float       # pJ per delivered bit
+    pkts_delivered: int
+    flits_delivered: int
+    flits_injected: int
+    energy_breakdown: dict
+
+    def row(self) -> str:
+        return (f"{self.name},{self.offered_load:.4f},{self.throughput:.4f},"
+                f"{self.bw_gbps_core:.3f},{self.avg_pkt_latency:.1f},"
+                f"{self.avg_pkt_energy_pj:.0f}")
+
+
+def compute_metrics(ps: PackedSim, st: SimState, name: str,
+                    offered_load: float, cycles: int | None = None) -> Metrics:
+    phy: PhyParams = ps.phy
+    sim: SimParams = ps.sim
+    cycles = cycles or sim.cycles
+    window = cycles - sim.warmup
+    bits = phy.flit_bits
+
+    counts = np.asarray(st.counts_into)
+    epb = np.asarray(ps.ss.b_epb)
+    e_links = float((counts * epb).sum()) * bits
+    n_sw = int(st.count_switch)
+    e_switch = n_sw * bits * phy.e_switch_pj_bit
+    e_ctrl = int(st.ctrl_count) * phy.ctrl_packet_flits * bits \
+        * phy.e_wireless_pj_bit
+    e_rx = float(st.awake_cycles) * phy.rx_idle_pj_cycle \
+        + float(st.sleep_cycles) * phy.rx_sleep_pj_cycle
+    energy = e_links + e_switch + e_ctrl + e_rx
+
+    pkts = max(int(st.pkts_del), 1)
+    flits = int(st.flits_del)
+    lat = (float(st.lat_sum) / int(st.lat_pkts)
+           if int(st.lat_pkts) else float("nan"))
+    thr = flits / window / ps.n_cores
+    return Metrics(
+        name=name,
+        offered_load=offered_load,
+        throughput=thr,
+        bw_gbps_core=thr * bits * phy.clock_ghz,
+        avg_pkt_latency=lat,
+        avg_pkt_energy_pj=energy / pkts,
+        energy_pj_bit=energy / max(flits * bits, 1),
+        pkts_delivered=int(st.pkts_del),
+        flits_delivered=flits,
+        flits_injected=int(st.flits_inj),
+        energy_breakdown=dict(links=e_links, switch=e_switch, ctrl=e_ctrl,
+                              rx=e_rx),
+    )
+
+
+def inflight_flits(st: SimState) -> int:
+    """Flits inside the network (buffers + pipes): conservation checks."""
+    import numpy as _np
+    occ = _np.where(_np.asarray(st.pkt_src) >= 0,
+                    _np.asarray(st.rcvd) - _np.asarray(st.sent), 0)
+    return int(occ.sum() + _np.asarray(st.pipe).sum())

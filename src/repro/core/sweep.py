@@ -1,0 +1,61 @@
+"""High-level experiment drivers for the paper's evaluations (§IV.B-D)."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Iterable
+
+from repro.core import simulator, traffic
+from repro.core.constants import DEFAULT_PHY, Fabric, PhyParams, SimParams
+from repro.core.metrics import Metrics, compute_metrics
+from repro.core.routing import compute_routing
+from repro.core.topology import Topology, build_xcym
+
+
+@functools.lru_cache(maxsize=64)
+def _cached_system(n_chips: int, n_mem: int, fabric: Fabric, phy: PhyParams,
+                   wireless_weight: float):
+    topo = build_xcym(n_chips, n_mem, fabric, phy)
+    rt = compute_routing(topo, wireless_weight=wireless_weight)
+    return topo, rt
+
+
+def run_point(
+    n_chips: int,
+    n_mem: int,
+    fabric: Fabric,
+    load: float,
+    p_mem: float = 0.2,
+    phy: PhyParams = DEFAULT_PHY,
+    sim: SimParams = SimParams(),
+    app: str | None = None,
+    wireless_weight: float = 3.0,
+    name: str | None = None,
+) -> Metrics:
+    """Simulate one (system, fabric, traffic) point and return §IV metrics."""
+    topo, rt = _cached_system(n_chips, n_mem, fabric, phy, wireless_weight)
+    if app is None:
+        tt = traffic.uniform_random(topo, load, p_mem, sim.cycles,
+                                    phy.pkt_flits, seed=sim.seed)
+    else:
+        tt = traffic.application(topo, traffic.APP_MODELS[app], sim.cycles,
+                                 phy.pkt_flits, seed=sim.seed,
+                                 load_scale=load)
+    ps = simulator.pack(topo, rt, tt, phy, sim)
+    st = simulator.run(ps)
+    label = name or f"{topo.name}/load={load}/p_mem={p_mem}" \
+        + (f"/{app}" if app else "")
+    return compute_metrics(ps, st, label, tt.offered_load)
+
+
+def saturation_bandwidth(n_chips: int, n_mem: int, fabric: Fabric,
+                         p_mem: float = 0.2, **kw) -> Metrics:
+    """Peak achievable bandwidth: drive at max load, report delivered."""
+    return run_point(n_chips, n_mem, fabric, load=1.0, p_mem=p_mem, **kw)
+
+
+def latency_sweep(n_chips: int, n_mem: int, fabric: Fabric,
+                  loads: Iterable[float], p_mem: float = 0.2,
+                  **kw) -> list[Metrics]:
+    return [run_point(n_chips, n_mem, fabric, load=l, p_mem=p_mem, **kw)
+            for l in loads]

@@ -1,0 +1,144 @@
+"""Traffic generation (paper §IV.B-D).
+
+All traffic is pre-generated on the host as per-source packet tables
+(birth cycle + destination switch), which keeps the cycle-accurate simulator
+free of dynamic allocation:
+
+- ``uniform``: each core generates packets by a Bernoulli process at
+  ``load`` flits/cycle/core; with probability ``p_mem`` the destination is a
+  (uniformly chosen) memory stack, else a uniformly chosen *other* core
+  anywhere in the system (§IV.B).
+- ``application``: SynFull-style [20] two-state Markov-modulated processes
+  (steady/burst) with per-benchmark memory intensity and hotspot skew,
+  standing in for the PARSEC/SPLASH2 traces of §IV.D (DESIGN.md §7.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.topology import Topology
+
+
+@dataclasses.dataclass(frozen=True)
+class AppTrafficModel:
+    """Two-state MMP parameters for one benchmark (SynFull-style)."""
+
+    name: str
+    p_mem: float          # fraction of packets that are memory accesses
+    steady_load: float    # flits/cycle/core in steady state
+    burst_load: float     # flits/cycle/core in bursts
+    p_enter_burst: float  # per-cycle steady->burst transition prob
+    p_exit_burst: float   # per-cycle burst->steady transition prob
+    hotspot_skew: float   # Zipf-ish concentration of core destinations
+
+
+# Calibrated to the published off-chip-traffic orderings of §IV.D: memory-
+# intensive benchmarks (canneal, radix, fft) have high p_mem; compute-bound
+# ones (bodytrack, barnes) are lighter and burstier.
+APP_MODELS = {
+    "canneal":      AppTrafficModel("canneal", 0.55, 0.08, 0.30, 0.004, 0.05, 0.6),
+    "fluidanimate": AppTrafficModel("fluidanimate", 0.30, 0.05, 0.20, 0.003, 0.06, 0.8),
+    "radix":        AppTrafficModel("radix", 0.60, 0.10, 0.35, 0.005, 0.04, 0.4),
+    "lu":           AppTrafficModel("lu", 0.40, 0.06, 0.25, 0.003, 0.05, 0.7),
+    "fft":          AppTrafficModel("fft", 0.50, 0.09, 0.30, 0.004, 0.05, 0.5),
+    "barnes":       AppTrafficModel("barnes", 0.25, 0.04, 0.15, 0.002, 0.06, 0.9),
+    "bodytrack":    AppTrafficModel("bodytrack", 0.20, 0.03, 0.12, 0.002, 0.07, 1.0),
+    "dedup":        AppTrafficModel("dedup", 0.35, 0.07, 0.28, 0.004, 0.05, 0.6),
+}
+
+
+@dataclasses.dataclass
+class TrafficTable:
+    """Pre-generated packets: per source, K slots ordered by birth."""
+
+    src_switch: np.ndarray   # [N_src] switch id of each source core
+    births: np.ndarray       # [N_src, K] cycle (INT32_MAX = no packet)
+    dests: np.ndarray        # [N_src, K] destination switch
+    offered_load: float      # flits/cycle/core actually offered
+
+    @property
+    def n_sources(self) -> int:
+        return len(self.src_switch)
+
+    @property
+    def k(self) -> int:
+        return self.births.shape[1]
+
+
+NO_PKT = np.int32(2**31 - 1)
+
+
+def _pack_arrivals(arr: np.ndarray, k: int) -> np.ndarray:
+    """[N, C] bool -> [N, k] first-k arrival cycles (NO_PKT padded)."""
+    n, c = arr.shape
+    births = np.full((n, k), NO_PKT, np.int32)
+    for i in range(n):
+        t = np.nonzero(arr[i])[0][:k]
+        births[i, : len(t)] = t
+    return births
+
+
+def _sample_dests(rng: np.random.Generator, topo: Topology, n: int, k: int,
+                  p_mem: float, hotspot_skew: float = 1.0) -> np.ndarray:
+    core_sw = np.nonzero(topo.is_core)[0].astype(np.int32)
+    mem_sw = np.nonzero(topo.is_mem)[0].astype(np.int32)
+    n_cores = len(core_sw)
+
+    is_memref = rng.random((n, k)) < p_mem
+    mem_pick = mem_sw[rng.integers(0, len(mem_sw), (n, k))]
+
+    # core destinations: uniform over *other* cores, optionally skewed
+    # (hotspot_skew < 1 concentrates traffic on low-index cores, modelling
+    # shared-data hotspots of cache-coherent applications)
+    if hotspot_skew >= 0.999:
+        j = rng.integers(0, n_cores - 1, (n, k))
+    else:
+        w = (np.arange(1, n_cores) ** (-(1.0 - hotspot_skew) * 2.0)).astype(np.float64)
+        w /= w.sum()
+        j = rng.choice(n_cores - 1, size=(n, k), p=w)
+    # skip self: for source i, candidate list is all cores except i
+    src_idx = np.arange(n)[:, None]
+    j = np.where(j >= src_idx, j + 1, j)
+    core_pick = core_sw[j]
+    return np.where(is_memref, mem_pick, core_pick).astype(np.int32)
+
+
+def uniform_random(topo: Topology, load: float, p_mem: float, cycles: int,
+                   pkt_flits: int, seed: int = 0) -> TrafficTable:
+    """§IV.B uniform random traffic at `load` flits/cycle/core."""
+    rng = np.random.default_rng(seed)
+    core_sw = np.nonzero(topo.is_core)[0].astype(np.int32)
+    n = len(core_sw)
+    p_pkt = min(1.0, load / pkt_flits)
+    arr = rng.random((n, cycles)) < p_pkt
+    k = max(8, int(np.ceil(cycles / pkt_flits)) + 8)
+    births = _pack_arrivals(arr, k)
+    dests = _sample_dests(rng, topo, n, k, p_mem)
+    return TrafficTable(core_sw, births, dests, offered_load=p_pkt * pkt_flits)
+
+
+def application(topo: Topology, model: AppTrafficModel, cycles: int,
+                pkt_flits: int, seed: int = 0,
+                load_scale: float = 1.0) -> TrafficTable:
+    """§IV.D application-specific traffic via a two-state MMP."""
+    rng = np.random.default_rng(seed)
+    core_sw = np.nonzero(topo.is_core)[0].astype(np.int32)
+    n = len(core_sw)
+    # simulate the 2-state Markov chain per core (vectorized over cores)
+    burst = np.zeros(n, bool)
+    arr = np.zeros((n, cycles), bool)
+    u = rng.random((n, cycles))
+    tr = rng.random((n, cycles))
+    for t in range(cycles):
+        p = np.where(burst, model.burst_load, model.steady_load) * load_scale / pkt_flits
+        arr[:, t] = u[:, t] < p
+        burst = np.where(burst, tr[:, t] >= model.p_exit_burst,
+                         tr[:, t] < model.p_enter_burst)
+    k = max(8, int(arr.sum(1).max()) + 4)
+    births = _pack_arrivals(arr, k)
+    dests = _sample_dests(rng, topo, n, k, model.p_mem, model.hotspot_skew)
+    offered = float(arr.mean()) * pkt_flits
+    return TrafficTable(core_sw, births, dests, offered_load=offered)

@@ -1,0 +1,58 @@
+"""WiMCS fabric models applied to ML collective traffic (DESIGN.md §2.2).
+
+The paper evaluates interconnects on three axes — energy, latency,
+bandwidth — for three fabrics (substrate serial I/O, interposer wireline,
+single-hop wireless).  This module applies exactly that evaluation to a
+training/serving step's collective traffic (from the compiled HLO): each
+fabric gets a pJ/bit figure, a per-hop latency, and a bandwidth, and the
+step's wire bytes are priced on each.
+
+The TPU ICI torus plays the "interposer" (multi-hop neighbor wiring),
+inter-pod DCN the "substrate" (serial links), and the paper's mm-wave
+medium the hypothetical single-hop in-package fabric.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class FabricSpec:
+    name: str
+    pj_per_bit: float
+    gbps: float                   # per-link bandwidth
+    avg_hops: float               # multi-hop dilution of effective bw
+
+
+FABRICS = {
+    # ICI wireline ~1.3 pJ/bit; 16-wide ring => avg 4 hops on a pod axis
+    "ici_wireline": FabricSpec("ici_wireline", 1.3, 400.0, 4.0),
+    # PCIe/DCN-class serial I/O (the paper's 5 pJ/bit substrate analogue)
+    "dcn_serial": FabricSpec("dcn_serial", 5.0, 100.0, 1.0),
+    # paper §III.B: 16 Gbps, 2.3 pJ/bit, single hop between any two nodes
+    "wireless_inpackage": FabricSpec("wireless_inpackage", 2.3, 16.0, 1.0),
+}
+
+
+@dataclasses.dataclass
+class FabricReport:
+    fabric: str
+    energy_mj: float
+    time_ms: float
+
+    def row(self) -> str:
+        return f"{self.fabric},{self.energy_mj:.3f},{self.time_ms:.3f}"
+
+
+def price_traffic(bytes_per_device: float, n_devices: int,
+                  fabric: FabricSpec) -> FabricReport:
+    bits = bytes_per_device * 8
+    energy = bits * n_devices * fabric.pj_per_bit * 1e-12 * 1e3      # mJ
+    time_ms = bytes_per_device * fabric.avg_hops / (fabric.gbps / 8 * 1e9) \
+        * 1e3
+    return FabricReport(fabric.name, energy, time_ms)
+
+
+def report_all(bytes_per_device: float, n_devices: int) -> list[FabricReport]:
+    return [price_traffic(bytes_per_device, n_devices, f)
+            for f in FABRICS.values()]

@@ -1,0 +1,114 @@
+"""Pallas TPU flash-attention kernel (GQA, causal, sliding-window).
+
+Grid: (B*H, n_q_blocks, n_kv_blocks), kv innermost; the online-softmax
+running state (m, l, acc) lives in VMEM scratch across kv iterations of the
+same q block.  Block shapes default to (128, 128) — MXU-aligned — with the
+full head dim resident per block (hd <= 256 fits VMEM comfortably:
+3 * 128 * 256 * 4B ~ 400 KB of scratch + two 128x256 operand tiles).
+
+KV heads are indexed through the BlockSpec index maps, so GQA never
+materializes repeated K/V.
+
+Validated against repro.kernels.ref.attention_ref in interpret mode on CPU
+(tests/test_kernels_flash.py); the TPU path is selected with interpret=False.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            bq: int, bkv: int, seq_q: int, seq_kv: int, causal: bool,
+            window: int, q_offset: int, n_kv: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                   # [bq, hd]
+    k = k_ref[0].astype(jnp.float32)                   # [bkv, hd]
+    v = v_ref[0].astype(jnp.float32)
+    hd = q.shape[-1]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) \
+        * (hd ** -0.5)                                 # [bq, bkv]
+
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0) \
+        + q_offset
+    kpos = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    mask = kpos < seq_kv
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] \
+        + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal: bool = True, window: int = 0,
+                         q_offset: int = 0, bq: int = 128, bkv: int = 128,
+                         interpret: bool = True) -> jnp.ndarray:
+    """q: [BH, Sq, hd]; k, v: [BHkv, Skv, hd] with BH % BHkv == 0."""
+    BH, Sq, hd = q.shape
+    BHkv, Skv, _ = k.shape
+    g = BH // BHkv
+    bq = min(bq, Sq)
+    bkv = min(bkv, Skv)
+    n_q = pl.cdiv(Sq, bq)
+    n_kv = pl.cdiv(Skv, bkv)
+
+    # pad to block multiples (mask below uses the true lengths); padded q
+    # rows are sliced away, padded kv columns are masked out
+    pq = n_q * bq - Sq
+    pkv = n_kv * bkv - Skv
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0)))
+    if pkv:
+        k = jnp.pad(k, ((0, 0), (0, pkv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pkv), (0, 0)))
+
+    kernel = functools.partial(
+        _kernel, bq=bq, bkv=bkv, seq_q=Sq, seq_kv=Skv, causal=causal,
+        window=window, q_offset=q_offset, n_kv=n_kv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(BH, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, bkv, hd), lambda b, qi, ki: (b // g, ki, 0)),
+            pl.BlockSpec((1, bkv, hd), lambda b, qi, ki: (b // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq + pq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),       # running max m
+            pltpu.VMEM((bq,), jnp.float32),       # running denom l
+            pltpu.VMEM((bq, hd), jnp.float32),    # accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :Sq] if pq else out

@@ -1,0 +1,117 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (the kernels execute in Python on
+CPU for validation) and False on TPU, where pl.pallas_call lowers to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rmsnorm as _rn
+from repro.kernels import ssd_scan as _ssd
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_offset",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_offset: int = 0, interpret: bool | None = None):
+    """q: [B, Sq, H, hd]; k, v: [B, Skv, Hkv, hd] -> [B, Sq, H, hd]."""
+    interpret = _default_interpret() if interpret is None else interpret
+    B, Sq, H, hd = q.shape
+    _, Skv, Hkv, _ = k.shape
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, hd)
+    out = _fa.flash_attention_bhsd(qf, kf, vf, causal=causal, window=window,
+                                   q_offset=q_offset, interpret=interpret)
+    return out.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _rmsnorm_cv(x, w, eps, interpret):
+    x2 = x.reshape(-1, x.shape[-1])
+    return _rn.rmsnorm_2d(x2, w, eps=eps, interpret=interpret).reshape(x.shape)
+
+
+def _rmsnorm_fwd(x, w, eps, interpret):
+    return _rmsnorm_cv(x, w, eps, interpret), (x, w)
+
+
+def _rmsnorm_bwd(eps, interpret, res, dy):
+    x, w = res
+    xf = x.astype(jnp.float32)
+    dyf = dy.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    n = x.shape[-1]
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    r = jax.lax.rsqrt(ms + eps)
+    g = dyf * wf                                   # [..., d]
+    dx = r * g - xf * (r ** 3) * jnp.mean(g * xf, axis=-1, keepdims=True)
+    dw = (dyf * xf * r).reshape(-1, n).sum(axis=0)
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+_rmsnorm_cv.defvjp(_rmsnorm_fwd, _rmsnorm_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def rmsnorm(x, w, *, eps: float = 1e-6, interpret: bool | None = None):
+    """x: [..., d] -> fused RMSNorm * w (custom VJP: analytic backward)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _rmsnorm_cv(x, w, eps, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, A, B, C, *, chunk: int = 128, interpret: bool | None = None):
+    """Full SSD: Pallas intra-chunk kernel + jnp inter-chunk recurrence.
+
+    x: [b, l, h, p]; dt: [b, l, h]; A: [h]; B, C: [b, l, n].
+    Returns (y [b, l, h, p], final_state [b, h, p, n])."""
+    interpret = _default_interpret() if interpret is None else interpret
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    chunk = min(chunk, l)
+    assert l % chunk == 0
+    c = l // chunk
+
+    # layout for the kernel: one grid cell per (batch*head, chunk)
+    xk = x.transpose(0, 2, 1, 3).reshape(b * h, c, chunk, p)
+    dtk = dt.transpose(0, 2, 1).reshape(b * h, c, chunk)
+    Bk = jnp.broadcast_to(B.reshape(b, 1, c, chunk, n),
+                          (b, h, c, chunk, n)).reshape(b * h, c, chunk, n)
+    Ck = jnp.broadcast_to(C.reshape(b, 1, c, chunk, n),
+                          (b, h, c, chunk, n)).reshape(b * h, c, chunk, n)
+    Ak = jnp.broadcast_to(A[None, :], (b, h)).reshape(b * h)
+
+    y_diag, states, decay = _ssd.ssd_intra_chunk(xk, dtk, Ak, Bk, Ck,
+                                                 interpret=interpret)
+
+    # inter-chunk recurrence (linear, tiny)
+    def scan_fn(carry, inp):
+        s_chunk, gamma = inp
+        s_new = carry * gamma[..., None, None] + s_chunk
+        return s_new, carry
+
+    # match the model path (repro/models/ssm.py): chunk states carried in
+    # bf16, recurrence accumulated in f32
+    states = states.astype(jnp.bfloat16).astype(jnp.float32)
+    init = jnp.zeros((b * h, p, n), jnp.float32)
+    final, prev = jax.lax.scan(
+        scan_fn, init, (states.swapaxes(0, 1), decay.swapaxes(0, 1)))
+    prev = prev.astype(jnp.bfloat16).swapaxes(0, 1)  # [bh, c, p, n]
+
+    # off-diagonal: carried-in state contribution
+    a = dtk * Ak[:, None, None]
+    acum = jnp.cumsum(a, axis=-1)
+    state_decay = jnp.exp(acum)                      # [bh, c, Q]
+    y_off = jnp.einsum("bcqn,bcpn,bcq->bcqp", Ck, prev, state_decay)
+    y = (y_diag + y_off).reshape(b, h, l, p).transpose(0, 2, 1, 3)
+    return y.astype(x.dtype), final.reshape(b, h, p, n)

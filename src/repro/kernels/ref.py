@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel (small shapes, exact math)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  q_offset: int = 0) -> jnp.ndarray:
+    """q: [BH, Sq, hd]; k, v: [BHkv, Skv, hd].  O(S^2) oracle."""
+    BH, Sq, hd = q.shape
+    BHkv, Skv, _ = k.shape
+    g = BH // BHkv
+    k = jnp.repeat(k, g, axis=0)
+    v = jnp.repeat(v, g, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(hd))
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def rmsnorm_ref(x, w, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps)
+            * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_intra_chunk_ref(x, dt, A, B, C):
+    """Oracle for the SSD intra-chunk kernel.
+
+    x: [BH, c, Q, P]; dt: [BH, c, Q]; A: [BH]; B, C: [BH, c, Q, N]."""
+    a = dt * A[:, None, None]                     # [BH, c, Q]
+    acum = jnp.cumsum(a, axis=-1)
+    diff = acum[..., :, None] - acum[..., None, :]
+    Q = x.shape[2]
+    tril = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(tril, jnp.exp(diff), 0.0)       # [BH, c, Q, Q]
+    scores = jnp.einsum("bcqn,bckn->bcqk", C, B)
+    w = scores * L * dt[..., None, :]
+    y = jnp.einsum("bcqk,bckp->bcqp", w, x.astype(jnp.float32))
+    decay_to_end = jnp.exp(acum[..., -1:] - acum)
+    bw = B * (dt * decay_to_end)[..., None]
+    st = jnp.einsum("bcqp,bcqn->bcpn", x.astype(jnp.float32), bw)
+    return y, st, jnp.exp(acum[..., -1])

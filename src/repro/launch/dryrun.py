@@ -1,0 +1,277 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes and extract memory / cost / collective analyses.
+
+This is the proof that the distribution config is coherent without real
+hardware: a sharding mismatch, compile-time OOM or unsupported collective
+fails the cell.  Results feed EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                    # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-7b \
+      --shape train_4k --mesh pod1 [--fsdp 1] [--remat dots] [--json out]
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, all_configs, supports
+from repro.interconnect.cost_model import Roofline, model_flops
+from repro.interconnect.hlo_traffic import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import Model
+from repro.sharding import specs as sh
+from repro.train.loop import TrainConfig, make_serve_step, make_train_step
+from repro.train.optimizer import AdamW
+
+# per-arch overrides keeping the big cells inside v5e HBM (§Dry-run notes)
+# Optimized per-arch configs (§Perf hillclimb; see EXPERIMENTS.md)
+ARCH_TUNING = {
+    "llama3-405b": dict(remat="block", state_dtype=jnp.bfloat16,
+                        microbatches=4),
+    "mixtral-8x22b": dict(remat="block", microbatches=4),
+    "dbrx-132b": dict(remat="block", microbatches=4),
+    "mamba2-1.3b": dict(ssm_chunk=256),
+    # 37M params: TP=16 over d_model=384 is pure overhead — run pure DP
+    "whisper-tiny": dict(tp=False),
+    "starcoder2-7b": dict(remat="block"),
+    "gemma-7b": dict(remat="block"),
+    "granite-8b": dict(remat="block"),
+    "llava-next-mistral-7b": dict(remat="block"),
+}
+
+
+def build_step(cfg, shape, mesh, *, fsdp=True, remat=None, microbatches=None,
+               state_dtype=jnp.float32, seq_shard_decode=False,
+               moe_ep=True, ssm_chunk=None, act_sp=False,
+               fsdp_gather_in_scan=False, pp=0):
+    """Return (jitted_fn, abstract_args) for one cell."""
+    tune = ARCH_TUNING.get(cfg.name, {})
+    remat = remat if remat is not None else tune.get("remat", "dots")
+    microbatches = microbatches if microbatches is not None else \
+        tune.get("microbatches", 1)
+    state_dtype = tune.get("state_dtype", state_dtype)
+    tp = tune.get("tp", True)
+
+    from jax.sharding import PartitionSpec as P
+    ssm_chunk = ssm_chunk or tune.get("ssm_chunk")
+    if ssm_chunk:
+        cfg = cfg.scaled(ssm_chunk=ssm_chunk)
+    dp = sh.dp_axes(mesh)
+    # --act-sp: Megatron-style sequence-parallel residual stream
+    act_spec = P(dp, "model", None) if act_sp else P(dp, None, None)
+    sp_specs = None
+    if cfg.has_attention and cfg.n_heads % mesh.shape["model"] != 0:
+        # heads do not divide the model axis: sequence-parallel attention
+        sp_specs = (P(dp, "model", None, None), P(dp, None, None, None))
+    moe_specs = None
+    if cfg.n_experts and moe_ep:
+        # group-local dispatch: one group per DP shard
+        import math as _math
+        G = _math.prod(mesh.shape[a] for a in dp)
+        if moe_ep == 2 and cfg.n_experts % mesh.shape["model"] == 0:
+            buf_spec = P(dp, "model", None, None)  # expert parallelism
+        else:
+            # tokens stay in their DP shard; the f-sharded expert weights
+            # provide TP-within-expert (measured faster than EP dispatch
+            # for both MoE archs on the 16x16 mesh — EXPERIMENTS.md §Perf)
+            buf_spec = P(dp, None, None, None)
+        moe_specs = (buf_spec, P(dp, None, None), G)
+    model = Model(cfg, remat=remat, act_spec=act_spec, sp_specs=sp_specs,
+                  moe_specs=moe_specs)
+    sc = sh.ShardingConfig(fsdp=fsdp, tp=tp,
+                           seq_shard_decode=seq_shard_decode)
+    pspec = model.param_specs()
+    if fsdp and fsdp_gather_in_scan:
+        layer_ps = sh.param_pspecs(cfg, pspec, mesh, sc)["layers"]
+        def strip(spec):
+            tail = tuple(spec)[1:]          # drop the stacked-layer dim
+            return P(*[None if a == "data" else a for a in tail])
+        model.fsdp_gather_specs = jax.tree.map(
+            strip, layer_ps, is_leaf=lambda v: isinstance(v, P))
+    p_sh = sh.named(sh.param_pspecs(cfg, pspec, mesh, sc), mesh)
+    inputs = model.input_specs(shape)
+
+    if shape.kind == "train":
+        opt = AdamW(state_dtype=state_dtype)
+        pps = sh.param_pspecs(cfg, pspec, mesh, sc)
+        if pp:
+            # pipeline parallelism over the model axis: layers stage-major
+            # sharded on dim 0; drop "model" from intra-layer dims
+            from repro.train.pipeline import make_pp_loss
+
+            def strip_model(spec):
+                tail = [None if a == "model" else a for a in tuple(spec)[1:]]
+                return P("model", *tail)
+            pps = dict(pps)
+            pps["layers"] = jax.tree.map(
+                strip_model, pps["layers"],
+                is_leaf=lambda v: isinstance(v, P))
+            p_sh = sh.named(pps, mesh)
+            pp_loss = make_pp_loss(cfg, mesh, n_stages=mesh.shape["model"],
+                                   n_micro=pp, remat=remat or "full")
+
+            class _PP:                       # make_train_step only needs .loss
+                loss = staticmethod(pp_loss)
+            model = _PP()
+        ts = make_train_step(model, opt,
+                             TrainConfig(microbatches=microbatches),
+                             grad_pspecs=pps)
+        o_specs = opt.init_specs(pspec)
+        o_sh = sh.named(opt.state_pspecs(pps), mesh)
+        b_sh = sh.named(sh.batch_pspecs(inputs, mesh), mesh)
+        fn = jax.jit(ts, in_shardings=(p_sh, o_sh, b_sh),
+                     out_shardings=(p_sh, o_sh, None),
+                     donate_argnums=(0, 1))
+        args = (pspec, o_specs, inputs)
+    elif shape.kind == "prefill":
+        def prefill(params, batch):
+            # forward + loss against shifted tokens (scoring pass)
+            b = dict(batch)
+            b["labels"] = batch["tokens"]
+            return model.loss(params, b)
+        b_sh = sh.named(sh.batch_pspecs(inputs, mesh), mesh)
+        fn = jax.jit(prefill, in_shardings=(p_sh, b_sh), out_shardings=None)
+        args = (pspec, inputs)
+    else:  # decode
+        serve = make_serve_step(model)
+        cache = model.decode_state_specs(shape.global_batch, shape.seq_len)
+        c_sh = sh.named(sh.cache_pspecs(cfg, cache, mesh, sc), mesh)
+        tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        t_sh = sh.named(sh.batch_pspecs({"t": tok}, mesh), mesh)["t"]
+        fn = jax.jit(serve, in_shardings=(p_sh, c_sh, t_sh, None),
+                     out_shardings=(None, c_sh), donate_argnums=(1,))
+        args = (pspec, cache, tok, jax.ShapeDtypeStruct((), jnp.int32))
+    return fn, args
+
+
+def run_cell(cfg, shape, mesh, mesh_name: str, **kw) -> dict:
+    t0 = time.perf_counter()
+    skip = supports(cfg, shape)
+    if skip:
+        return {"arch": cfg.name, "shape": shape.name, "mesh": mesh_name,
+                "status": skip}
+    try:
+        fn, args = build_step(cfg, shape, mesh, **kw)
+        with mesh:
+            lowered = fn.lower(*args)
+            compiled = lowered.compile()
+        ma = compiled.memory_analysis()
+        hlo = compiled.as_text()
+        # trip-count-aware HLO analysis (cost_analysis counts scan bodies
+        # once — see interconnect/hlo_traffic.py)
+        hs = analyze_hlo(hlo, mesh.size)
+        n = mesh.size
+        # memory_analysis sizes are per-device; outputs alias donated inputs
+        peak_mem = (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                    if ma else 0.0)
+        rl = Roofline(
+            arch=cfg.name, shape=shape.name, mesh=mesh_name,
+            flops_per_dev=hs.flops_per_dev,
+            bytes_per_dev=hs.hbm_bytes_per_dev,
+            coll_bytes_per_dev=hs.coll_bytes_per_dev,
+            n_devices=n,
+            model_flops=model_flops(cfg, shape),
+            peak_mem_per_dev=peak_mem,
+        )
+        out = {
+            "arch": cfg.name, "shape": shape.name, "mesh": mesh_name,
+            "status": "OK",
+            "compile_s": round(time.perf_counter() - t0, 1),
+            "flops_per_dev": rl.flops_per_dev,
+            "bytes_per_dev": rl.bytes_per_dev,
+            "coll_bytes_per_dev": rl.coll_bytes_per_dev,
+            "coll_by_op": {k: round(v) for k, v in hs.coll_by_op.items()},
+            "mem_gb_per_dev": round(peak_mem / 1e9, 3),
+            "t_compute_ms": rl.t_compute * 1e3,
+            "t_memory_ms": rl.t_memory * 1e3,
+            "t_collective_ms": rl.t_collective * 1e3,
+            "bottleneck": rl.bottleneck,
+            "model_flops": rl.model_flops,
+            "useful_flop_ratio": rl.useful_flop_ratio,
+            "roofline_fraction": rl.roofline_fraction,
+            "fabric_energy_mj": rl.fabric_energy_mj(),
+        }
+        return out
+    except Exception as e:  # a failing cell is a bug; record it loudly
+        return {"arch": cfg.name, "shape": shape.name, "mesh": mesh_name,
+                "status": f"FAIL: {type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-2000:]}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["pod1", "pod2", "both"])
+    ap.add_argument("--fsdp", type=int, default=1)
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--seq-shard-decode", type=int, default=1)
+    ap.add_argument("--moe-ep", type=int, default=1)
+    ap.add_argument("--ssm-chunk", type=int, default=None)
+    ap.add_argument("--act-sp", type=int, default=0)
+    ap.add_argument("--fsdp-gather-in-scan", type=int, default=0)
+    ap.add_argument("--pp", type=int, default=0,
+                    help="pipeline microbatches; stages = model axis size")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+
+    meshes = []
+    if args.mesh in ("pod1", "both"):
+        meshes.append(("pod1_16x16", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("pod2", "both"):
+        meshes.append(("pod2_2x16x16", make_production_mesh(multi_pod=True)))
+
+    cfgs = all_configs()
+    archs = [args.arch] if args.arch else sorted(cfgs)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+
+    results = []
+    for arch in archs:
+        cfg = cfgs[arch]
+        for shape_name in shapes:
+            shape = SHAPES[shape_name]
+            for mesh_name, mesh in meshes:
+                r = run_cell(cfg, shape, mesh, mesh_name, fsdp=bool(args.fsdp),
+                             remat=args.remat, microbatches=args.microbatches,
+                             seq_shard_decode=bool(args.seq_shard_decode),
+                             moe_ep=bool(args.moe_ep),
+                             ssm_chunk=args.ssm_chunk,
+                             act_sp=bool(args.act_sp),
+                             fsdp_gather_in_scan=bool(
+                                 args.fsdp_gather_in_scan),
+                             pp=args.pp)
+                results.append(r)
+                status = r["status"]
+                extra = ""
+                if status == "OK":
+                    extra = (f" mem={r['mem_gb_per_dev']}GB "
+                             f"tc={r['t_compute_ms']:.2f}ms "
+                             f"tm={r['t_memory_ms']:.2f}ms "
+                             f"tx={r['t_collective_ms']:.2f}ms "
+                             f"bott={r['bottleneck']} "
+                             f"rf={r['roofline_fraction']:.3f}")
+                print(f"{arch:24s} {shape_name:12s} {mesh_name:12s} "
+                      f"{status}{extra}", flush=True)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1)
+    n_ok = sum(r["status"] == "OK" for r in results)
+    n_skip = sum(r["status"].startswith("SKIP") for r in results)
+    n_fail = len(results) - n_ok - n_skip
+    print(f"dryrun: {n_ok} OK, {n_skip} skipped, {n_fail} FAILED")
+    if n_fail:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

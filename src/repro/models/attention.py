@@ -1,0 +1,179 @@
+"""Attention: GQA/MQA with RoPE, sliding windows, KV-cache decode.
+
+Three interchangeable inner products (all numerically cross-checked in
+tests/test_kernels_flash.py):
+  - ``naive``     O(S^2) materialized scores — the oracle, small shapes only.
+  - ``blockwise`` flash-style streaming softmax in pure JAX (lax.scan over
+                  KV blocks) — the default XLA path; memory O(S * block).
+  - ``pallas``    the TPU Pallas kernel in repro.kernels.flash_attention
+                  (interpret=True on CPU), selected via use_pallas=True.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import constrain, rope
+
+NEG = -1e30
+
+
+def _repeat_kv(k: jnp.ndarray, groups: int) -> jnp.ndarray:
+    if groups == 1:
+        return k
+    return jnp.repeat(k, groups, axis=2)
+
+
+def naive_attention(q, k, v, *, causal: bool, window: int = 0,
+                    q_offset: int = 0) -> jnp.ndarray:
+    """q: [B,Sq,H,hd]; k,v: [B,Sk,Hkv,hd]. Oracle implementation."""
+    B, Sq, H, hd = q.shape
+    Hkv = k.shape[2]
+    k = _repeat_kv(k, H // Hkv)
+    v = _repeat_kv(v, H // Hkv)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(k.shape[1])
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    scores = jnp.where(mask[None, None], scores, NEG)
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+def blockwise_attention(q, k, v, *, causal: bool, window: int = 0,
+                        q_offset: int = 0, block: int = 1024) -> jnp.ndarray:
+    """Streaming-softmax attention: O(Sq * block) live memory.
+
+    Scans over KV blocks keeping a running (max, denominator, accumulator)
+    per query — the flash-attention recurrence, in pure jnp.
+    """
+    B, Sq, H, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    block = min(block, Sk)
+    n_blocks = (Sk + block - 1) // block
+    pad = n_blocks * block - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(B, n_blocks, block, Hkv, hd)
+    vb = v.reshape(B, n_blocks, block, Hkv, hd)
+    qf = q.astype(jnp.float32) / jnp.sqrt(jnp.float32(hd))
+    qpos = jnp.arange(Sq) + q_offset
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kblk, vblk, i = blk
+        kpos = i * block + jnp.arange(block)
+        kr = _repeat_kv(kblk, g)                       # [B, blk, H, hd]
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kr.astype(jnp.float32))
+        mask = kpos[None, :] <= (qpos[:, None] if causal else jnp.inf)
+        if window:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        mask &= (kpos < Sk)[None, :]
+        s = jnp.where(mask[None, None], s, NEG)
+        m_new = jnp.maximum(m, s.max(-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        vr = _repeat_kv(vblk, g).astype(jnp.float32)
+        acc = acc * alpha[..., None] + jnp.einsum("bhqk,bkhd->bhqd", p, vr)
+        l = l * alpha + p.sum(-1)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, H, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, hd), jnp.float32)
+    # flash semantics: recompute block probabilities in the backward pass
+    # instead of saving O(S^2) scan residuals
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(body), (m0, l0, a0),
+        (kb.swapaxes(0, 1), vb.swapaxes(0, 1), jnp.arange(n_blocks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.swapaxes(1, 2).astype(q.dtype)       # [B, Sq, H, hd]
+
+
+def attention_inner(q, k, v, *, causal, window=0, q_offset=0,
+                    impl: str = "blockwise", block: int = 1024):
+    if impl == "naive":
+        return naive_attention(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset)
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v, causal=causal, window=window,
+                                    q_offset=q_offset)
+    return blockwise_attention(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset, block=block)
+
+
+def attn_spec(d: int, H: int, Hkv: int, hd: int, dtype) -> dict:
+    return {
+        "wq": jax.ShapeDtypeStruct((d, H * hd), dtype),
+        "wk": jax.ShapeDtypeStruct((d, Hkv * hd), dtype),
+        "wv": jax.ShapeDtypeStruct((d, Hkv * hd), dtype),
+        "wo": jax.ShapeDtypeStruct((H * hd, d), dtype),
+    }
+
+
+def attention(x, p, cfg, *, positions, causal=True, impl="blockwise",
+              kv_cache: Optional[dict] = None, cache_slot=None,
+              valid_len=None, x_kv=None, use_rope=True, sp_specs=None):
+    """Full attention block.
+
+    Decode mode (``kv_cache`` given): writes this step's roped k/v into
+    cache slot ``cache_slot`` (ring-buffer slot for sliding-window archs)
+    and attends over the first ``valid_len`` slots.  Because k is roped at
+    insert time with its *absolute* position, slot order is irrelevant.
+    ``x_kv`` enables cross-attention (kv from encoder)."""
+    B = x.shape[0]
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    src = x if x_kv is None else x_kv
+    q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(B, -1, H, hd)
+    k = jnp.einsum("bsd,de->bse", src, p["wk"]).reshape(B, -1, Hkv, hd)
+    v = jnp.einsum("bsd,de->bse", src, p["wv"]).reshape(B, -1, Hkv, hd)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        if x_kv is None:
+            k = rope(k, positions, cfg.rope_theta)
+    if sp_specs is not None and kv_cache is None:
+        # sequence-parallel attention: shard q's sequence over "model" when
+        # the head count does not divide the model axis (25, 36, 6 heads) —
+        # otherwise GSPMD replicates the whole score computation
+        q = constrain(q, sp_specs[0])
+        k = constrain(k, sp_specs[1])
+        v = constrain(v, sp_specs[1])
+
+    new_cache = None
+    if kv_cache is not None:
+        S = kv_cache["k"].shape[1]
+        k_all = jax.lax.dynamic_update_slice_in_dim(
+            kv_cache["k"], k.astype(kv_cache["k"].dtype), cache_slot, axis=1)
+        v_all = jax.lax.dynamic_update_slice_in_dim(
+            kv_cache["v"], v.astype(kv_cache["v"].dtype), cache_slot, axis=1)
+        new_cache = {"k": k_all, "v": v_all}
+        valid = jnp.arange(S) < valid_len
+        # grouped-head einsums: never materialize the repeated K/V (for
+        # llama-405b decode that repeat is 8.6 GB per layer)
+        g = H // Hkv
+        qg = q.reshape(B, -1, Hkv, g, hd).astype(jnp.float32)
+        scores = jnp.einsum("bqhgd,bshd->bhgqs", qg,
+                            k_all.astype(jnp.float32))
+        scores = scores / jnp.sqrt(jnp.float32(hd))
+        scores = jnp.where(valid[None, None, None, None], scores, NEG)
+        pr = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhgqs,bshd->bqhgd", pr,
+                         v_all.astype(jnp.float32))
+        out = out.reshape(B, out.shape[1], H, hd).astype(x.dtype)
+    else:
+        out = attention_inner(q, k, v, causal=causal,
+                              window=cfg.sliding_window, impl=impl)
+    y = jnp.einsum("bse,ed->bsd", out.reshape(B, out.shape[1], H * hd),
+                   p["wo"])
+    return y, new_cache

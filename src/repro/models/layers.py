@@ -1,0 +1,121 @@
+"""Core neural layers (pure JAX, bf16 params / f32 statistics)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def constrain(x, spec):
+    """Pin activation sharding; no-op when spec is None (host tests)."""
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(ms + eps)) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+              eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm(x, p, kind: str):
+    if kind == "rmsnorm":
+        return rmsnorm(x, p["w"])
+    return layernorm(x, p["w"], p["b"])
+
+
+def norm_spec(d: int, kind: str, dtype) -> dict:
+    if kind == "rmsnorm":
+        return {"w": jax.ShapeDtypeStruct((d,), dtype)}
+    return {"w": jax.ShapeDtypeStruct((d,), dtype),
+            "b": jax.ShapeDtypeStruct((d,), dtype)}
+
+
+def norm_init(d: int, kind: str, dtype) -> dict:
+    if kind == "rmsnorm":
+        return {"w": jnp.ones((d,), dtype)}
+    return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def glu_mlp(x: jnp.ndarray, p: dict, act: str) -> jnp.ndarray:
+    """Gated MLP (SwiGLU/GeGLU) or plain MLP when no gate weight exists."""
+    h = jnp.einsum("...d,df->...f", x, p["w_in"])
+    fn = jax.nn.silu if act == "silu" else jax.nn.gelu
+    if "w_gate" in p:
+        g = jnp.einsum("...d,df->...f", x, p["w_gate"])
+        h = fn(g.astype(jnp.float32)).astype(h.dtype) * h
+    else:
+        h = fn(h.astype(jnp.float32)).astype(h.dtype)
+    return jnp.einsum("...f,fd->...d", h, p["w_out"])
+
+
+def mlp_spec(d: int, f: int, dtype, gated: bool = True) -> dict:
+    spec = {"w_in": jax.ShapeDtypeStruct((d, f), dtype),
+            "w_out": jax.ShapeDtypeStruct((f, d), dtype)}
+    if gated:
+        spec["w_gate"] = jax.ShapeDtypeStruct((d, f), dtype)
+    return spec
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embeddings. x: [B, S, H, hd]; positions: [S] or [B, S]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs   # [..., S, half]
+    ang = ang[..., None, :]                                  # head axis
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1.astype(x.dtype), y2.astype(x.dtype)], axis=-1)
+
+
+def sinusoidal_positions(seq: int, d: int) -> np.ndarray:
+    pos = np.arange(seq)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / (10_000 ** (2 * i / d))
+    out = np.zeros((seq, d), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return out
+
+
+def chunked_xent(logits_fn, x: jnp.ndarray, emb: jnp.ndarray,
+                 labels: jnp.ndarray, chunk: int = 512) -> jnp.ndarray:
+    """Cross-entropy without materializing [B, S, V] logits.
+
+    Scans over sequence chunks; each chunk computes logits, log-softmax and
+    the label log-prob, then discards the logits.  `logits_fn(h, emb)` maps
+    hidden chunk -> logits chunk.
+    """
+    B, S, D = x.shape
+    chunk = min(chunk, S)
+    n = S // chunk
+    rem = S - n * chunk
+
+    def one(h, lab):
+        logits = logits_fn(h, emb).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+        return (logz - gold).sum()
+
+    def body(tot, i):
+        h = jax.lax.dynamic_slice_in_dim(x, i * chunk, chunk, axis=1)
+        lab = jax.lax.dynamic_slice_in_dim(labels, i * chunk, chunk, axis=1)
+        return tot + one(h, lab), None
+
+    total, _ = jax.lax.scan(body, jnp.float32(0.0), jnp.arange(n))
+    if rem:
+        total = total + one(x[:, n * chunk:], labels[:, n * chunk:])
+    return total / (B * S)

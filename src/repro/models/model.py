@@ -1,0 +1,114 @@
+"""Unified model API used by train/serve/dryrun.
+
+``Model(cfg)`` wraps the functional pieces in transformer.py and provides:
+  - param_specs() / init()           parameters (abstract / concrete)
+  - loss(params, batch)              training loss
+  - decode_state_specs()/init_decode_state() / decode(params, cache, ...)
+  - input_specs(shape)               ShapeDtypeStruct stand-ins per shape,
+                                     including modality-frontend stubs
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec, supports
+from repro.models import transformer as tf
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    impl: str = "blockwise"       # attention inner: naive|blockwise|pallas
+    remat: str = "none"           # none|dots|full
+    xent_chunk: int = 512
+    param_dtype: Any = jnp.bfloat16
+    act_spec: Any = None          # PartitionSpec for [B,S,d] activations
+    sp_specs: Any = None          # (q_spec, kv_spec) seq-parallel attention
+    moe_specs: Any = None         # (buf_spec, tok_spec) EP dispatch layout
+    fsdp_gather_specs: Any = None  # per-layer gathered param specs
+
+    def param_specs(self):
+        return tf.param_specs(self.cfg, self.param_dtype)
+
+    def init(self, key):
+        return tf.init_params(self.cfg, key, self.param_dtype)
+
+    def loss(self, params, batch):
+        return tf.lm_loss(self.cfg, params, batch, impl=self.impl,
+                          remat=self.remat, xent_chunk=self.xent_chunk,
+                          act_spec=self.act_spec, sp_specs=self.sp_specs,
+                          moe_specs=self.moe_specs,
+                          fsdp_gather_specs=self.fsdp_gather_specs)
+
+    def decode_state_specs(self, batch: int, seq_len: int):
+        return tf.decode_state_specs(self.cfg, batch, seq_len,
+                                     self.param_dtype)
+
+    def init_decode_state(self, batch: int, seq_len: int):
+        return tf.init_decode_state(self.cfg, batch, seq_len,
+                                    self.param_dtype)
+
+    def decode(self, params, cache, tokens, cache_len):
+        return tf.decode_step(self.cfg, params, cache, tokens, cache_len,
+                              act_spec=self.act_spec)
+
+    # ---- input stand-ins ------------------------------------------------
+
+    def input_specs(self, shape: ShapeSpec) -> dict:
+        """Abstract inputs for one step of `shape.kind`.
+
+        train/prefill: full-sequence tokens (+labels for train).
+        decode: one new token per sequence (+ cache handled separately).
+        Modality stubs: whisper gets precomputed audio-frame embeddings,
+        llava gets precomputed patch embeddings (DESIGN.md §4).
+        """
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        if shape.kind in ("train", "prefill"):
+            spec = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+            if shape.kind == "train":
+                spec["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+            if cfg.family == "encdec":
+                # encoder consumes audio frames; decoder consumes tokens.
+                frames = cfg.audio_frames_default
+                spec["frames"] = jax.ShapeDtypeStruct(
+                    (B, frames, cfg.d_model), jnp.float32)
+                # decoder length capped at whisper's 448-token context
+                dec = min(S, 448)
+                spec["tokens"] = jax.ShapeDtypeStruct((B, dec), i32)
+                if shape.kind == "train":
+                    spec["labels"] = jax.ShapeDtypeStruct((B, dec), i32)
+            if cfg.family == "vlm":
+                spec["patches"] = jax.ShapeDtypeStruct(
+                    (B, cfg.vlm_patches_default, cfg.d_model), jnp.float32)
+        else:  # decode
+            spec = {"tokens": jax.ShapeDtypeStruct((B, 1), i32),
+                    "cache_len": jax.ShapeDtypeStruct((), i32)}
+        return spec
+
+    def make_inputs(self, shape: ShapeSpec, key) -> dict:
+        """Concrete random inputs matching input_specs (smoke tests)."""
+        specs = self.input_specs(shape)
+        out = {}
+        for name, s in specs.items():
+            key, k = jax.random.split(key)
+            if s.dtype == jnp.int32 and s.shape:
+                out[name] = jax.random.randint(k, s.shape, 0, self.cfg.vocab,
+                                               jnp.int32)
+            elif s.dtype == jnp.int32:
+                out[name] = jnp.int32(0)
+            else:
+                out[name] = jax.random.normal(k, s.shape, s.dtype)
+        return out
+
+
+def build_model(name_or_cfg, **kw) -> Model:
+    if isinstance(name_or_cfg, ModelConfig):
+        return Model(name_or_cfg, **kw)
+    from repro.configs.base import get_config
+    return Model(get_config(name_or_cfg), **kw)

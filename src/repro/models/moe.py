@@ -1,0 +1,112 @@
+"""Mixture-of-Experts feed-forward with top-k routing (Mixtral / DBRX).
+
+Sort-based capacity dispatch (Megatron/MegaBlocks style, jit-friendly):
+tokens are flattened, (token, expert) assignments sorted by expert, each
+expert takes up to ``capacity`` tokens (overflow dropped — standard
+capacity-factor semantics), expert FFNs run as one batched einsum over the
+expert dimension, and results are combined back weighted by router gates.
+
+Sharding: the expert dimension of ``w_in/w_gate/w_out`` carries the "model"
+(EP) axis when ``n_experts`` divides it, else the ffn dimension carries it
+(TP-within-expert); see repro/sharding/specs.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import constrain
+
+
+def moe_spec(cfg: ModelConfig, dtype) -> dict:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": jax.ShapeDtypeStruct((d, E), dtype),
+        "w_in": jax.ShapeDtypeStruct((E, d, f), dtype),
+        "w_gate": jax.ShapeDtypeStruct((E, d, f), dtype),
+        "w_out": jax.ShapeDtypeStruct((E, f, d), dtype),
+    }
+
+
+def moe_ff(x: jnp.ndarray, p: dict, cfg: ModelConfig,
+           specs=None) -> jnp.ndarray:
+    """x: [B, S, d] -> [B, S, d].
+
+    Group-local dispatch: tokens are split into ``n_groups`` groups (one per
+    data shard) and each group sorts/dispatches only its own tokens into a
+    per-group expert buffer [G, E, cap_g, d].  No global sort, no global
+    scatter — the only cross-device movement is the buffer resharding from
+    (data-sharded groups) to the expert layout, which GSPMD lowers to an
+    all-to-all of just the routed tokens.
+
+    ``specs=(buf_spec, tok_spec, n_groups)``: constraints for the dispatch
+    buffer [G, E, cap_g, d] and token view [G, Tg, d]."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    buf_spec, tok_spec, G = specs if specs is not None else (None, None, 1)
+    assert T % G == 0, (T, G)
+    Tg = T // G
+    xf = constrain(x.reshape(G, Tg, d), tok_spec)
+
+    logits = jnp.einsum("gtd,de->gte", xf, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)            # [G, Tg, k]
+    gate_vals = gate_vals / gate_vals.sum(-1, keepdims=True)
+
+    cap = int(cfg.capacity_factor * Tg * k / E) + 1
+
+    flat_e = expert_idx.reshape(G, Tg * k)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)          # per group
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    # position of each assignment within its expert's per-group queue
+    run_start = jax.vmap(lambda se: jnp.searchsorted(se, jnp.arange(E)))(
+        sorted_e)                                              # [G, E]
+    pos = jnp.arange(Tg * k)[None] - jnp.take_along_axis(
+        run_start, sorted_e, axis=-1)
+    keep = pos < cap
+    dest = jnp.where(keep, sorted_e * cap + pos, E * cap)      # drop slot
+    tok_of = order // k                                        # [G, Tg*k]
+
+    gidx = jnp.arange(G)[:, None]
+    buf = jnp.zeros((G, E * cap, d), x.dtype).at[gidx, dest].set(
+        jnp.take_along_axis(xf, tok_of[..., None], axis=1), mode="drop")
+    bufe = constrain(buf.reshape(G, E, cap, d), buf_spec)
+
+    h_in = jnp.einsum("gecd,edf->gecf", bufe, p["w_in"])
+    h_gate = jnp.einsum("gecd,edf->gecf", bufe, p["w_gate"])
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    h = act(h_gate.astype(jnp.float32)).astype(h_in.dtype) * h_in
+    y_e = jnp.einsum("gecf,efd->gecd", h, p["w_out"])
+    y_e = constrain(y_e, buf_spec).reshape(G, E * cap, d)
+
+    # combine: gather expert outputs back to (token, k) slots, weight, sum
+    gathered = jnp.take_along_axis(
+        y_e, jnp.clip(dest, 0, E * cap - 1)[..., None], axis=1)
+    gathered = jnp.where(keep[..., None], gathered, 0)
+    w = jnp.take_along_axis(gate_vals.reshape(G, Tg * k), order, axis=-1)
+    y_sorted = gathered * w[..., None].astype(x.dtype)
+    y_flat = jnp.zeros((G, Tg, d), x.dtype).at[gidx, tok_of].add(y_sorted)
+    y_flat = constrain(y_flat, tok_spec)
+    return y_flat.reshape(B, S, d)
+
+
+def moe_ff_dense_reference(x: jnp.ndarray, p: dict,
+                           cfg: ModelConfig) -> jnp.ndarray:
+    """Oracle: every expert computes every token; no capacity drops."""
+    B, S, d = x.shape
+    logits = jnp.einsum("bsd,de->bse", x, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, cfg.top_k)
+    gate_vals = gate_vals / gate_vals.sum(-1, keepdims=True)
+    gates = jnp.zeros_like(probs).at[
+        jnp.arange(B)[:, None, None], jnp.arange(S)[None, :, None],
+        expert_idx].set(gate_vals)
+
+    h_in = jnp.einsum("bsd,edf->bsef", x, p["w_in"])
+    h_gate = jnp.einsum("bsd,edf->bsef", x, p["w_gate"])
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    h = act(h_gate.astype(jnp.float32)).astype(h_in.dtype) * h_in
+    y = jnp.einsum("bsef,efd->bsed", h, p["w_out"])
+    return jnp.einsum("bsed,bse->bsd", y, gates.astype(x.dtype))

@@ -1,0 +1,181 @@
+"""Mamba2 / SSD (state-space duality) sequence mixer [arXiv:2405.21060].
+
+Training/prefill uses the chunked SSD algorithm (quadratic within a chunk,
+linear state-passing across chunks via ``lax.scan``); decode uses the O(1)
+recurrent update — the property that makes `long_500k` run at all.
+
+A Pallas TPU kernel for the intra-chunk block is in
+repro/kernels/ssd_scan.py; this module is the pure-jnp production path and
+doubles as its reference.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def ssm_spec(cfg: ModelConfig, dtype) -> dict:
+    d, di, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    return {
+        "w_xz": jax.ShapeDtypeStruct((d, 2 * di), dtype),       # x and gate z
+        "w_bc": jax.ShapeDtypeStruct((d, 2 * N), dtype),        # B and C (g=1)
+        "w_dt": jax.ShapeDtypeStruct((d, H), dtype),
+        "a_log": jax.ShapeDtypeStruct((H,), jnp.float32),
+        "dt_bias": jax.ShapeDtypeStruct((H,), jnp.float32),
+        "d_skip": jax.ShapeDtypeStruct((H,), jnp.float32),
+        "w_out": jax.ShapeDtypeStruct((di, d), dtype),
+        "norm_w": jax.ShapeDtypeStruct((di,), dtype),
+    }
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """Stable segment-sum: out[..., i, j] = sum_{j < m <= i} a[..., m]."""
+    T = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """SSD forward.
+
+    x:  [b, l, h, p]   inputs per head
+    dt: [b, l, h]      positive step sizes
+    A:  [h]            negative decay rates
+    B, C: [b, l, n]    input/output projections (single group)
+    Returns y: [b, l, h, p], final_state: [b, h, p, n]
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    c = l // chunk
+    xb = x.reshape(b, c, chunk, h, p)
+    dtb = dt.reshape(b, c, chunk, h)
+    Bb = B.reshape(b, c, chunk, n)
+    Cb = C.reshape(b, c, chunk, n)
+
+    a = dtb * A[None, None, None, :]                   # [b,c,q,h] (negative)
+    a_cum = jnp.cumsum(a, axis=2)                      # within-chunk
+    # intra-chunk (diagonal) term: attention-like with decay kernel
+    Lmat = jnp.exp(_segsum(a.transpose(0, 1, 3, 2)))   # [b,c,h,q,q]
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cb, Bb)     # [b,c,q,k]
+    y_diag = jnp.einsum("bchqk,bcqk,bckh,bckhp->bcqhp",
+                        Lmat, scores, dtb, xb)
+
+    # chunk-level states: decayed sum of inputs within each chunk.
+    # Stored/communicated in bf16 (halves the dominant memory-roofline
+    # term); the inter-chunk recurrence itself accumulates in f32.
+    decay_to_end = jnp.exp(a_cum[:, :, -1:, :] - a_cum)    # [b,c,q,h]
+    states = jnp.einsum("bcqn,bcqh,bcqh,bcqhp->bchpn",
+                        Bb, dtb, decay_to_end, xb).astype(jnp.bfloat16)
+
+    # inter-chunk recurrence over c
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])              # [b,c,h]
+
+    def scan_fn(carry, inp):
+        s_prev = carry                                     # [b,h,p,n]
+        s_chunk, gamma = inp                               # [b,h,p,n], [b,h]
+        s_new = s_prev * gamma[..., None, None] + s_chunk
+        return s_new, s_prev
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (states.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+         chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.astype(jnp.bfloat16) \
+        .transpose(1, 0, 2, 3, 4)                          # [b,c,h,p,n]
+
+    # off-diagonal term: contribution of the carried-in state
+    state_decay = jnp.exp(a_cum)                           # [b,c,q,h]
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp",
+                       Cb, prev_states.astype(x.dtype), state_decay)
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y, final
+
+
+def ssm_forward(x, p, cfg: ModelConfig, *, state=None):
+    """Mamba2 mixer.  x: [B, S, d].
+
+    Training/prefill: state=None -> chunked SSD.
+    Decode: state = dict(ssm=[B,h,p,n]) -> single-step recurrence (S == 1).
+    Returns (y [B,S,d], new_state or None).
+    """
+    Bsz, S, d = x.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    xz = jnp.einsum("bsd,de->bse", x, p["w_xz"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    bc = jnp.einsum("bsd,de->bse", x, p["w_bc"])
+    Bm, Cm = jnp.split(bc, 2, axis=-1)                     # [B,S,N]
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["w_dt"]).astype(jnp.float32)
+        + p["dt_bias"])                                    # [B,S,H]
+    A = -jnp.exp(p["a_log"])                               # [H] negative
+    xh = xin.reshape(Bsz, S, H, P)
+
+    if state is None:
+        chunk = min(cfg.ssm_chunk, S)
+        y, final = ssd_chunked(xh, dt, A, Bm, Cm, chunk)
+        new_state = {"ssm": final}
+    else:
+        # O(1) decode: s' = s * exp(dt A) + dt * B (x) ; y = C . s'
+        s = state["ssm"]                                   # [B,H,P,N]
+        dt1 = dt[:, 0]                                     # [B,H]
+        decay = jnp.exp(dt1 * A[None, :])                  # [B,H]
+        upd = jnp.einsum("bn,bh,bhp->bhpn", Bm[:, 0], dt1,
+                         xh[:, 0].astype(jnp.float32))
+        s_new = s * decay[..., None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32), s_new)
+        y = y[:, None]                                     # [B,1,H,P]
+        new_state = {"ssm": s_new}
+
+    y = y + xh.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(Bsz, S, H * P).astype(x.dtype)
+    # gated RMSNorm (mamba2 epilogue)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    yf = y.astype(jnp.float32)
+    ms = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    y = (yf * jax.lax.rsqrt(ms + 1e-6)).astype(x.dtype) * p["norm_w"]
+    return jnp.einsum("bse,ed->bsd", y, p["w_out"]), new_state
+
+
+def ssm_state_spec(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    return {"ssm": jax.ShapeDtypeStruct(
+        (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), dtype)}
+
+
+def ssm_reference(x, p, cfg: ModelConfig):
+    """Oracle: plain sequential recurrence (slow, small shapes only)."""
+    Bsz, S, d = x.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    xz = jnp.einsum("bsd,de->bse", x, p["w_xz"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    bc = jnp.einsum("bsd,de->bse", x, p["w_bc"])
+    Bm, Cm = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["w_dt"]).astype(jnp.float32)
+        + p["dt_bias"])
+    A = -jnp.exp(p["a_log"])
+    xh = xin.reshape(Bsz, S, H, P).astype(jnp.float32)
+
+    def step(s, t):
+        decay = jnp.exp(dt[:, t] * A[None, :])
+        upd = jnp.einsum("bn,bh,bhp->bhpn", Bm[:, t].astype(jnp.float32),
+                         dt[:, t], xh[:, t])
+        s = s * decay[..., None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, t].astype(jnp.float32), s)
+        return s, y
+
+    s0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    s_fin, ys = jax.lax.scan(step, s0, jnp.arange(S))
+    y = ys.transpose(1, 0, 2, 3)                           # [B,S,H,P]
+    y = y + xh * p["d_skip"][None, None, :, None]
+    y = y.reshape(Bsz, S, H * P).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    yf = y.astype(jnp.float32)
+    ms = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    y = (yf * jax.lax.rsqrt(ms + 1e-6)).astype(x.dtype) * p["norm_w"]
+    return jnp.einsum("bse,ed->bsd", y, p["w_out"]), {"ssm": s_fin}

@@ -1,0 +1,338 @@
+"""Model assembly: decoder-only LMs (dense/MoE/SSM/hybrid), encoder-decoder
+(Whisper) and VLM (LLaVA-style stub frontend) — all with scan-over-layers
+stacked parameters so the traced HLO stays depth-independent.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (chunked_xent, glu_mlp, mlp_spec, norm,
+                                 norm_init, norm_spec)
+
+Params = Any
+
+
+# --------------------------------------------------------------------------
+# parameter specs (ShapeDtypeStructs — the dry-run never allocates)
+# --------------------------------------------------------------------------
+
+def layer_spec(cfg: ModelConfig, dtype, cross: bool = False) -> dict:
+    d = cfg.d_model
+    spec: dict = {"ln1": norm_spec(d, cfg.norm, dtype)}
+    if cfg.has_attention:
+        spec["attn"] = attn_mod.attn_spec(d, cfg.n_heads, cfg.n_kv_heads,
+                                          cfg.hd, dtype)
+    if cfg.has_ssm:
+        spec["ssm"] = ssm_mod.ssm_spec(cfg, dtype)
+        spec["ln_ssm"] = norm_spec(d, cfg.norm, dtype)
+    if cross:
+        spec["ln_x"] = norm_spec(d, cfg.norm, dtype)
+        spec["xattn"] = attn_mod.attn_spec(d, cfg.n_heads, cfg.n_kv_heads,
+                                           cfg.hd, dtype)
+    if cfg.family == "moe":
+        spec["ffn"] = moe_mod.moe_spec(cfg, dtype)
+    elif cfg.family == "ssm":
+        pass                                    # mamba2 has no separate FFN
+    else:
+        spec["ffn"] = mlp_spec(d, cfg.d_ff, dtype, cfg.mlp_gated)
+    if "ffn" in spec:
+        spec["ln2"] = norm_spec(d, cfg.norm, dtype)
+    return spec
+
+
+def _stack_spec(spec, n):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), spec)
+
+
+def param_specs(cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    specs: dict = {
+        "embed": jax.ShapeDtypeStruct((cfg.vocab_padded, d), dtype),
+        "ln_f": norm_spec(d, cfg.norm, dtype),
+        "layers": _stack_spec(layer_spec(cfg, dtype,
+                                         cross=cfg.family == "encdec"),
+                              cfg.n_layers),
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = jax.ShapeDtypeStruct((cfg.vocab_padded, d), dtype)
+    if cfg.family == "encdec":
+        enc_cfg = cfg.scaled(family="dense", sliding_window=0)
+        specs["enc_layers"] = _stack_spec(layer_spec(enc_cfg, dtype),
+                                          cfg.enc_layers)
+        specs["enc_ln_f"] = norm_spec(d, cfg.norm, dtype)
+        # conv frontend is a stub: inputs arrive as frame embeddings
+    if cfg.family == "vlm":
+        specs["patch_proj"] = jax.ShapeDtypeStruct((d, d), dtype)
+    return specs
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.bfloat16) -> Params:
+    """Random init matching param_specs (smoke tests / examples)."""
+    specs = param_specs(cfg, dtype)
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    keys = jax.random.split(key, len(paths_leaves))
+    out = []
+    for k, (path, s) in zip(keys, paths_leaves):
+        name = jax.tree_util.keystr(path)
+        if "a_log" in name:
+            out.append(jnp.log(jax.random.uniform(k, s.shape, jnp.float32,
+                                                  1.0, 16.0)))
+        elif "dt_bias" in name:
+            out.append(jnp.zeros(s.shape, s.dtype))
+        elif "d_skip" in name or "'w'" in name or "norm_w" in name \
+                or name.endswith("'b']"):
+            fill = 0.0 if name.endswith("'b']") else 1.0
+            out.append(jnp.full(s.shape, fill, s.dtype))
+        else:
+            fan_in = s.shape[-2] if len(s.shape) >= 2 else s.shape[-1]
+            out.append((jax.random.normal(k, s.shape, jnp.float32)
+                        * (fan_in ** -0.5)).astype(s.dtype))
+    return jax.tree.unflatten(treedef, [l for l in out])
+
+
+# --------------------------------------------------------------------------
+# forward passes
+# --------------------------------------------------------------------------
+
+def _layer_body(cfg: ModelConfig, x, lp, *, positions, causal, impl,
+                enc_out=None, sp_specs=None, act_spec=None, moe_specs=None):
+    # NOTE(§Perf #5): constraining each sublayer output was measured a
+    # no-op for TP archs and a 1.9x collective REGRESSION for the
+    # sequence-parallel-attention archs (hymba/starcoder2) — constraints
+    # live only on the layer output (backbone) and inside MoE dispatch.
+    del act_spec
+    if cfg.has_attention:
+        h = norm(x, lp["ln1"], cfg.norm)
+        a, _ = attn_mod.attention(h, lp["attn"], cfg, positions=positions,
+                                  causal=causal, impl=impl, sp_specs=sp_specs)
+        if cfg.has_ssm:                               # hybrid: parallel heads
+            s, _ = ssm_mod.ssm_forward(norm(x, lp["ln_ssm"], cfg.norm),
+                                       lp["ssm"], cfg)
+            a = 0.5 * (a + s)
+        x = x + a
+    else:                                             # pure SSM
+        h = norm(x, lp["ln1"], cfg.norm)
+        s, _ = ssm_mod.ssm_forward(h, lp["ssm"], cfg)
+        x = x + s
+    if enc_out is not None:
+        h = norm(x, lp["ln_x"], cfg.norm)
+        a, _ = attn_mod.attention(h, lp["xattn"], cfg, positions=positions,
+                                  causal=False, x_kv=enc_out, use_rope=False,
+                                  sp_specs=sp_specs)
+        x = x + a
+    if "ffn" in lp:
+        h = norm(x, lp["ln2"], cfg.norm)
+        if cfg.family == "moe":
+            f = moe_mod.moe_ff(h, lp["ffn"], cfg, specs=moe_specs)
+        else:
+            f = glu_mlp(h, lp["ffn"], cfg.act)
+        x = x + f
+    return x
+
+
+def _constrain(x, spec):
+    """Pin activation sharding (batch over DP); no-op outside a mesh."""
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def backbone(cfg: ModelConfig, params, x, *, positions, causal=True,
+             impl="blockwise", enc_out=None, remat: str = "none",
+             act_spec=None, sp_specs=None, moe_specs=None,
+             fsdp_gather_specs=None):
+    """Scan the stacked layers over x: [B, S, d]."""
+
+    def body(carry, lp):
+        if fsdp_gather_specs is not None:
+            # pin the FSDP parameter all-gather INSIDE the scan body: one
+            # layer resident at a time instead of XLA hoisting the gather
+            # of the whole stack out of the loop (= full params resident)
+            lp = jax.tree.map(
+                lambda w, sp: _constrain(w, sp), lp, fsdp_gather_specs,
+                is_leaf=lambda v: hasattr(v, "shape"))
+        out = _layer_body(cfg, carry, lp, positions=positions,
+                          causal=causal, impl=impl, enc_out=enc_out,
+                          sp_specs=sp_specs, act_spec=act_spec,
+                          moe_specs=moe_specs)
+        return _constrain(out, act_spec), None
+
+    if remat == "block":
+        # sqrt(L) nested checkpointing: the outer scan saves only block
+        # inputs, the inner scan recomputes its layers — O(sqrt(L)) saved
+        # activations, ~2x forward recompute (MaxText-style for 100B+).
+        L = jax.tree.leaves(params["layers"])[0].shape[0]
+        k = max(1, int(L ** 0.5))
+        while L % k:
+            k -= 1
+        nb = L // k
+
+        def inner(carry, lp):
+            return jax.checkpoint(body)(carry, lp)
+
+        def outer(carry, block_params):
+            out, _ = jax.lax.scan(inner, carry, block_params)
+            return out, None
+
+        blocked = jax.tree.map(
+            lambda a: a.reshape((nb, k) + a.shape[1:]), params["layers"])
+        x, _ = jax.lax.scan(jax.checkpoint(outer), x, blocked)
+        return x
+    if remat == "full":
+        body = jax.checkpoint(body)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return x
+
+
+def encoder(cfg: ModelConfig, params, frames, *, impl="blockwise",
+            remat="none", act_spec=None, sp_specs=None):
+    """Whisper-style encoder over precomputed frame embeddings (stub
+    frontend).  Bidirectional attention, sinusoidal positions baked into the
+    stub input."""
+    enc_cfg = cfg.scaled(family="dense", sliding_window=0)
+    positions = jnp.arange(frames.shape[1])
+
+    def body(carry, lp):
+        return _layer_body(enc_cfg, carry, lp, positions=positions,
+                           causal=False, impl=impl, sp_specs=sp_specs), None
+
+    if remat != "none":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, frames, params["enc_layers"])
+    return norm(x, params["enc_ln_f"], cfg.norm)
+
+
+def lm_loss(cfg: ModelConfig, params, batch, *, impl="blockwise",
+            remat="none", xent_chunk=512, act_spec=None,
+            sp_specs=None, moe_specs=None,
+            fsdp_gather_specs=None) -> jnp.ndarray:
+    """Causal LM loss.  batch: tokens/labels [B, S] (+ modality extras)."""
+    emb = params["embed"]
+    x = _constrain(emb[batch["tokens"]].astype(jnp.bfloat16), act_spec)
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(jnp.bfloat16)   # [B, P, d] stub
+        px = jnp.einsum("bpd,de->bpe", patches, params["patch_proj"])
+        x = _constrain(jnp.concatenate([px, x], axis=1), act_spec)
+    positions = jnp.arange(x.shape[1])
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = encoder(cfg, params, batch["frames"].astype(jnp.bfloat16),
+                          impl=impl, remat=remat, act_spec=act_spec,
+                          sp_specs=sp_specs)
+    x = backbone(cfg, params, x, positions=positions, causal=True,
+                 impl=impl, enc_out=enc_out, remat=remat, act_spec=act_spec,
+                 sp_specs=sp_specs, moe_specs=moe_specs,
+                 fsdp_gather_specs=fsdp_gather_specs)
+    x = norm(x, params["ln_f"], cfg.norm)
+    if cfg.family == "vlm":                 # loss only over text positions
+        x = x[:, -batch["tokens"].shape[1]:]
+    unemb = params.get("unembed", emb)
+
+    def logits_fn(h, e):
+        logits = jnp.einsum("bsd,vd->bsv", h, e)
+        if cfg.vocab_padded != cfg.vocab:       # mask padded vocab rows
+            pad_mask = jnp.arange(cfg.vocab_padded) < cfg.vocab
+            logits = jnp.where(pad_mask, logits, -1e30)
+        return logits
+
+    return chunked_xent(logits_fn, x, unemb, batch["labels"],
+                        chunk=xent_chunk)
+
+
+# --------------------------------------------------------------------------
+# decode (serve_step)
+# --------------------------------------------------------------------------
+
+def decode_state_specs(cfg: ModelConfig, batch: int, seq_len: int,
+                       dtype=jnp.bfloat16) -> dict:
+    """Per-layer stacked decode caches as ShapeDtypeStructs."""
+    L = cfg.n_layers
+    spec: dict = {}
+    if cfg.has_attention:
+        S = min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+        kv = jax.ShapeDtypeStruct((L, batch, S, cfg.n_kv_heads, cfg.hd), dtype)
+        spec["k"] = kv
+        spec["v"] = kv
+    if cfg.has_ssm:
+        s = ssm_mod.ssm_state_spec(cfg, batch)["ssm"]
+        spec["ssm"] = jax.ShapeDtypeStruct((L,) + s.shape, s.dtype)
+    return spec
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, seq_len: int,
+                      dtype=jnp.bfloat16) -> dict:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        decode_state_specs(cfg, batch, seq_len, dtype),
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def decode_step(cfg: ModelConfig, params, cache: dict, tokens, cache_len,
+                act_spec=None):
+    """One decode step: tokens [B, 1] at position cache_len.
+
+    Sliding-window archs index the cache modulo the window (ring buffer);
+    SSM state is O(1).  Returns (logits [B, V], new_cache).
+    """
+    emb = params["embed"]
+    x = _constrain(emb[tokens].astype(jnp.bfloat16), act_spec)  # [B, 1, d]
+    positions = jnp.full((1,), cache_len, jnp.int32)
+
+    window = cfg.sliding_window
+    if window:
+        slot = cache_len % window                  # ring-buffer slot
+        valid_len = jnp.minimum(cache_len + 1, window)
+    else:
+        slot = cache_len
+        valid_len = cache_len + 1
+
+    def body(carry, inp):
+        x = carry
+        lp, lc = inp
+        cfg_local = cfg
+        h = norm(x, lp["ln1"], cfg.norm)
+        new_lc = dict(lc)
+        if cfg.has_attention:
+            kv_cache = {"k": lc["k"], "v": lc["v"]}
+            a, new_kv = attn_mod.attention(
+                h, lp["attn"], cfg_local, positions=positions,
+                kv_cache=kv_cache, cache_slot=slot, valid_len=valid_len)
+            new_lc["k"], new_lc["v"] = new_kv["k"], new_kv["v"]
+            if cfg.has_ssm:
+                s, new_s = ssm_mod.ssm_forward(
+                    norm(x, lp["ln_ssm"], cfg.norm), lp["ssm"], cfg_local,
+                    state={"ssm": lc["ssm"]})
+                new_lc["ssm"] = new_s["ssm"]
+                a = 0.5 * (a + s)
+            x = x + a
+        else:
+            s, new_s = ssm_mod.ssm_forward(h, lp["ssm"], cfg_local,
+                                           state={"ssm": lc["ssm"]})
+            new_lc["ssm"] = new_s["ssm"]
+            x = x + s
+        if "ffn" in lp:
+            h = norm(x, lp["ln2"], cfg.norm)
+            if cfg.family == "moe":
+                f = moe_mod.moe_ff(h, lp["ffn"], cfg_local)
+            else:
+                f = glu_mlp(h, lp["ffn"], cfg.act)
+            x = x + f
+        return x, new_lc
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    x = norm(x, params["ln_f"], cfg.norm)
+    unemb = params.get("unembed", emb)
+    logits = jnp.einsum("bsd,vd->bsv", x, unemb)[:, 0, :cfg.vocab]
+    return logits.astype(jnp.float32), new_cache

@@ -1,0 +1,103 @@
+"""Batched decode serving engine.
+
+Continuous-batching style loop over a fixed slot pool: each slot holds one
+request's position; finished slots are refilled from a queue.  The KV/SSM
+cache is one pytree sized [L, B_slots, ...] so the whole engine state lives
+on device and every step is one jitted `decode` call.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+from repro.serve.sampler import SamplerConfig, sample
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int
+    out: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, model: Model, params, *, slots: int, max_seq: int,
+                 sampler: SamplerConfig = SamplerConfig(), seed: int = 0):
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_seq = max_seq
+        self.sampler = sampler
+        self.cache = model.init_decode_state(slots, max_seq)
+        self.pos = np.zeros(slots, np.int32)
+        self.active: list[Optional[Request]] = [None] * slots
+        self.queue: list[Request] = []
+        self.key = jax.random.key(seed)
+        self._step = jax.jit(self._decode_one)
+
+    def _decode_one(self, params, cache, tokens, cache_len, key):
+        logits, cache = self.model.decode(params, cache, tokens, cache_len)
+        nxt = sample(logits, key, self.sampler)
+        return nxt, cache
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _fill_slots(self) -> None:
+        for s in range(self.slots):
+            if self.active[s] is None and self.queue:
+                req = self.queue.pop(0)
+                self.active[s] = req
+                self.pos[s] = 0
+
+    def step(self) -> int:
+        """One engine tick: decode one token for every active slot.
+
+        Prompts are consumed token-by-token (teacher-forced prefill through
+        the decode path — simple and always correct; a chunked prefill is a
+        serving optimization left to the roofline study)."""
+        self._fill_slots()
+        if not any(self.active):
+            return 0
+        tokens = np.zeros((self.slots, 1), np.int32)
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            p = self.pos[s]
+            if p < len(req.prompt):
+                tokens[s, 0] = req.prompt[p]
+            else:
+                tokens[s, 0] = req.out[-1] if req.out else 0
+        # engine steps are synchronous across slots: cache_len is the max
+        # position (slots at earlier positions simply ignore the extra kv)
+        cache_len = jnp.int32(int(self.pos.max()))
+        self.key, k = jax.random.split(self.key)
+        nxt, self.cache = self._step(self.params, self.cache,
+                                     jnp.asarray(tokens), cache_len, k)
+        nxt = np.asarray(nxt)
+        n_active = 0
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            n_active += 1
+            self.pos[s] += 1
+            if self.pos[s] >= len(req.prompt):
+                req.out.append(int(nxt[s]))
+                if len(req.out) >= req.max_new \
+                        or self.pos[s] >= self.max_seq - 1:
+                    req.done = True
+                    self.active[s] = None
+        return n_active
+
+    def run(self, max_ticks: int = 10_000) -> None:
+        for _ in range(max_ticks):
+            if not self.queue and not any(self.active):
+                break
+            self.step()

@@ -1,0 +1,162 @@
+"""Sharding rules: parameter/activation PartitionSpecs per mesh.
+
+Axes: ``("data", "model")`` single-pod, ``("pod", "data", "model")``
+multi-pod.  Batch is sharded over DP = (pod, data); tensor parallelism over
+"model"; with ``fsdp=True`` parameters and optimizer state are additionally
+sharded over "data" (ZeRO-3-style; GSPMD inserts the all-gathers).
+
+MoE experts carry the "model" axis when the expert count divides it
+(expert parallelism); otherwise the ffn dimension does (TP-within-expert).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingConfig:
+    fsdp: bool = True             # shard params/opt-state over "data"
+    ep: bool = True               # expert parallelism when divisible
+    tp: bool = True               # tensor parallelism over "model"
+                                  # (False = pure DP: right for tiny models)
+    shard_vocab: bool = True      # vocab-shard the (un)embedding
+    seq_shard_decode: bool = False  # shard KV cache sequence dim (SP)
+
+
+def dp_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def sanitize(pspec: P, shape, mesh) -> P:
+    """Drop mesh axes from dims they do not divide (replicate instead).
+
+    GSPMD input shardings require exact divisibility; odd head counts
+    (36, 25) or vocab sizes would otherwise fail the cell.  Dropped axes are
+    a deliberate, logged trade (documented in EXPERIMENTS.md §Dry-run)."""
+    parts = list(pspec) + [None] * (len(shape) - len(pspec))
+    fixed = []
+    for dim, axes in zip(shape, parts):
+        if axes is None:
+            fixed.append(None)
+            continue
+        ax = axes if isinstance(axes, tuple) else (axes,)
+        size = math.prod(mesh.shape[a] for a in ax)
+        fixed.append(axes if dim % size == 0 else None)
+    return P(*fixed)
+
+
+def _apply(specs, pspecs, mesh):
+    return jax.tree.map(
+        lambda s, p: sanitize(p, s.shape, mesh), specs, pspecs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _f(sc: ShardingConfig) -> Optional[str]:
+    return "data" if sc.fsdp else None
+
+
+def param_pspecs(cfg: ModelConfig, specs, mesh, sc: ShardingConfig = ShardingConfig()):
+    """Map the param_specs tree to PartitionSpecs by path rules."""
+    model_sz = mesh.shape["model"]
+    fs = _f(sc)
+    use_ep = sc.ep and cfg.n_experts and cfg.n_experts % model_sz == 0
+
+    def rule(path: str, s) -> P:
+        r = s.ndim  # includes the leading layer-stack dim for "layers"
+        stacked = path.startswith("['layers']") or path.startswith("['enc_layers']")
+
+        def pad(spec_tail):  # prepend None for the stacked layer dim
+            return P(*(((None,) if stacked else ()) + spec_tail))
+
+        if "embed" in path or "unembed" in path:
+            return P("model" if sc.shard_vocab else None, fs)
+        if re.search(r"\['(ln1|ln2|ln_f|ln_x|ln_ssm|enc_ln_f)'\]", path):
+            return pad((None,))
+        if "a_log" in path or "dt_bias" in path or "d_skip" in path \
+                or "norm_w" in path:
+            return pad((None,))
+        if "patch_proj" in path:
+            return P(None, None)
+        if "router" in path:
+            return pad((fs, None))
+        if re.search(r"\['ffn'\]\['w_(in|gate)'\]", path) and cfg.n_experts:
+            return pad(("model", fs, None) if use_ep else (None, fs, "model"))
+        if re.search(r"\['ffn'\]\['w_out'\]", path) and cfg.n_experts:
+            return pad(("model", None, fs) if use_ep else (None, "model", fs))
+        if re.search(r"\['w_(in|gate)'\]", path):
+            return pad((fs, "model"))
+        if re.search(r"\['w_out'\]", path) and "ssm" not in path:
+            return pad(("model", fs))
+        if re.search(r"\['(wq|wk|wv)'\]", path):
+            return pad((fs, "model"))
+        if re.search(r"\['wo'\]", path):
+            return pad(("model", fs))
+        # ssm
+        if "w_xz" in path:
+            return pad((fs, "model"))
+        if "w_bc" in path or "w_dt" in path:
+            return pad((fs, None))
+        if re.search(r"\['ssm'\]\['w_out'\]", path):
+            return pad(("model", fs))
+        return P(*([None] * r))
+
+    def detp(spec: P) -> P:
+        if sc.tp:
+            return spec
+        return P(*[None if a == "model" else a for a in tuple(spec)])
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: hasattr(x, "shape"))
+    out = [sanitize(detp(rule(jax.tree_util.keystr(p), s)), s.shape, mesh)
+           for p, s in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_pspecs(specs, mesh):
+    dp = dp_axes(mesh)
+
+    def rule(path, s):
+        if s.ndim == 0:
+            return P()
+        return P(dp, *([None] * (s.ndim - 1)))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: hasattr(x, "shape"))
+    out = [sanitize(rule(jax.tree_util.keystr(p), s), s.shape, mesh)
+           for p, s in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def cache_pspecs(cfg: ModelConfig, specs, mesh,
+                 sc: ShardingConfig = ShardingConfig()):
+    """Decode caches: [L, B, S, Hkv, hd] kv + [L, B, H, P, N] ssm state.
+    Batch over DP; kv heads (or the sequence, with SP) over model."""
+    dp = dp_axes(mesh)
+
+    def rule(path, s):
+        if "ssm" in path:
+            return P(None, dp, "model", None, None)
+        if sc.seq_shard_decode:               # SP: shard the sequence dim
+            return P(None, dp, "model", None, None)
+        # kv-head counts are often not divisible by the model axis (4, 5,
+        # 8 vs 16): shard head_dim instead — always a multiple of 16
+        return P(None, dp, None, None, "model")
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: hasattr(x, "shape"))
+    out = [sanitize(rule(jax.tree_util.keystr(p), s), s.shape, mesh)
+           for p, s in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def named(tree, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,88 @@
+"""Training step factory: loss -> grads -> AdamW, with optional
+microbatching (sequential gradient accumulation) and remat policies.
+
+``make_train_step`` builds the pjit-able function; shardings are applied by
+the caller (launch/train.py, launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.train.optimizer import AdamW, AdamWState
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1        # sequential grad-accumulation steps
+    loss_scale: float = 1.0      # static loss scaling (bf16 rarely needs it)
+
+
+def make_train_step(model: Model, opt: AdamW,
+                    tc: TrainConfig = TrainConfig(), grad_pspecs=None):
+    """Returns train_step(params, opt_state, batch) -> (params, state, metrics).
+
+    ``grad_pspecs``: PartitionSpec tree for gradients; pinning them to the
+    parameter sharding makes GSPMD reduce-scatter gradients instead of
+    all-reducing them to a replicated (and memory-exploding) layout."""
+
+    def constrain_grads(grads):
+        if grad_pspecs is None:
+            return grads
+        import jax.lax as lax
+        return jax.tree.map(
+            lambda g, s: lax.with_sharding_constraint(g, s), grads,
+            grad_pspecs, is_leaf=lambda x: hasattr(x, "shape"))
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch) * tc.loss_scale
+
+    def grads_of(params, batch):
+        if tc.microbatches == 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+
+        n = tc.microbatches
+
+        def resplit(x):
+            b = x.shape[0]
+            assert b % n == 0, (b, n)
+            return x.reshape(n, b // n, *x.shape[1:])
+
+        micro = jax.tree.map(resplit, batch)
+
+        def body(acc, mb):
+            loss_acc, g_acc = acc
+            loss, g = jax.value_and_grad(loss_fn)(params, mb)
+            g_acc = jax.tree.map(lambda a, x: a + x.astype(jnp.float32),
+                                 g_acc, g)
+            return (loss_acc + loss, g_acc), None
+
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, grads), _ = jax.lax.scan(body, (jnp.float32(0.0), zero), micro)
+        inv = 1.0 / n
+        return loss * inv, jax.tree.map(lambda g: g * inv, grads)
+
+    def train_step(params, opt_state: AdamWState, batch):
+        loss, grads = grads_of(params, batch)
+        grads = constrain_grads(grads)
+        if tc.loss_scale != 1.0:
+            grads = jax.tree.map(lambda g: g / tc.loss_scale, grads)
+            loss = loss / tc.loss_scale
+        params, opt_state, om = opt.update(grads, opt_state, params)
+        metrics = {"loss": loss.astype(jnp.float32), **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_serve_step(model: Model):
+    """serve_step(params, cache, tokens, cache_len) -> (logits, cache)."""
+
+    def serve_step(params, cache, tokens, cache_len):
+        return model.decode(params, cache, tokens, cache_len)
+
+    return serve_step

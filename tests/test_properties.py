@@ -1,0 +1,61 @@
+"""Hypothesis property tests over the simulator's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import simulator, traffic
+from repro.core.constants import DEFAULT_PHY, Fabric, SimParams
+from repro.core.metrics import inflight_flits
+from repro.core.routing import compute_routing
+from repro.core.topology import build_xcym
+
+_CACHE = {}
+
+
+def _system(fabric):
+    if fabric not in _CACHE:
+        topo = build_xcym(4, 4, fabric)
+        _CACHE[fabric] = (topo, compute_routing(topo))
+    return _CACHE[fabric]
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    fabric=st.sampled_from(list(Fabric)),
+    load=st.floats(0.01, 1.0),
+    p_mem=st.floats(0.0, 0.9),
+    seed=st.integers(0, 2**16),
+)
+def test_conservation_and_bounds(fabric, load, p_mem, seed):
+    topo, rt = _system(fabric)
+    sim = SimParams(cycles=600, warmup=0, seed=seed)
+    tt = traffic.uniform_random(topo, load, p_mem, sim.cycles, 64, seed=seed)
+    ps = simulator.pack(topo, rt, tt, DEFAULT_PHY, sim)
+    stt = simulator.run(ps)
+    # conservation
+    assert int(stt.flits_inj) == int(stt.flits_del) + inflight_flits(stt)
+    # counters non-negative and sane
+    assert int(stt.pkts_del) * 64 <= int(stt.flits_del) + 64
+    occ = np.where(np.asarray(stt.pkt_src) >= 0,
+                   np.asarray(stt.rcvd) - np.asarray(stt.sent), 0)
+    assert (occ >= 0).all()
+    depth = np.asarray(ps.ss.b_depth)[:, None]
+    assert (occ + np.asarray(stt.pipe).sum(-1) <= depth).all()
+    # energy event counts only on real buffers
+    counts = np.asarray(stt.counts_into)
+    assert (counts[~np.asarray(ps.ss.b_dst < ps.ss.next_out.shape[0] - 1)]
+            >= 0).all()
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**16), load=st.floats(0.02, 0.2))
+def test_latency_lower_bound(seed, load):
+    """No delivered packet beats the shortest-path + serialization bound."""
+    topo, rt = _system(Fabric.WIRELESS)
+    sim = SimParams(cycles=800, warmup=0, seed=seed)
+    tt = traffic.uniform_random(topo, load, 0.2, sim.cycles, 64, seed=seed)
+    ps = simulator.pack(topo, rt, tt, DEFAULT_PHY, sim)
+    stt = simulator.run(ps)
+    n = int(stt.lat_pkts)
+    if n:
+        # min possible: 1 inject + 1 hop (4) + 63 stream + 1 eject = 69
+        assert float(stt.lat_sum) / n >= 69.0

@@ -1,0 +1,103 @@
+"""Routing: Floyd-Warshall vs networkx Dijkstra, tree/loop/deadlock props."""
+import networkx as nx
+import numpy as np
+import pytest
+
+from repro.core.constants import Fabric
+from repro.core.routing import (TRANSIT_FORBIDDEN, _all_links,
+                                compute_routing, path_hops)
+from repro.core.topology import build_xcym
+
+
+def _nx_graph(topo, wireless_weight=3.0):
+    src, dst, w = _all_links(topo, topo.phy, wireless_weight)
+    g = nx.DiGraph()
+    g.add_nodes_from(range(topo.n_switches))
+    for s, d, ww in zip(src, dst, w):
+        if not g.has_edge(s, d) or g[s][d]["weight"] > ww:
+            g.add_edge(int(s), int(d), weight=float(ww))
+    return g
+
+
+@pytest.mark.parametrize("fabric", list(Fabric))
+def test_distances_match_networkx(fabric):
+    topo = build_xcym(4, 4, fabric)
+    rt = compute_routing(topo)
+    g = _nx_graph(topo)
+    lengths = dict(nx.all_pairs_dijkstra_path_length(g))
+    cores = np.nonzero(topo.is_core)[0]
+    rng = np.random.default_rng(0)
+    for s in rng.choice(cores, 10, replace=False):
+        for d in rng.choice(topo.n_switches, 10, replace=False):
+            assert rt.dist[s, d] == pytest.approx(lengths[int(s)][int(d)])
+
+
+@pytest.mark.parametrize("fabric", list(Fabric))
+def test_no_routing_loops(fabric):
+    topo = build_xcym(8, 4, fabric)
+    rt = compute_routing(topo)
+    cores = np.nonzero(topo.is_core)[0]
+    rng = np.random.default_rng(1)
+    for s in rng.choice(cores, 12, replace=False):
+        for d in rng.choice(topo.n_switches, 12, replace=False):
+            if topo.is_mem[d] and d != s:
+                pass
+            path_hops(rt, topo, int(s), int(d))  # raises on loop
+
+
+def test_at_most_one_wireless_hop():
+    """Shortest paths cross the air at most once (phase-VC soundness)."""
+    topo = build_xcym(4, 4, Fabric.WIRELESS)
+    rt = compute_routing(topo)
+    Lw = topo.n_links
+    Wp = len(topo.wl_pairs)
+    cores = np.nonzero(topo.is_core)[0]
+    for s in cores:
+        for d in range(topo.n_switches):
+            hops = path_hops(rt, topo, int(s), int(d))
+            n_wl = sum(1 for h in hops if Lw <= h < Lw + Wp)
+            assert n_wl <= 1, (s, d, hops)
+
+
+def test_no_transit_through_memory():
+    for fabric in (Fabric.SUBSTRATE, Fabric.INTERPOSER, Fabric.WIRELESS):
+        topo = build_xcym(4, 4, fabric)
+        rt = compute_routing(topo)
+        src, dst, _ = _all_links(topo, topo.phy, 3.0)
+        cores = np.nonzero(topo.is_core)[0]
+        for s in cores[::7]:
+            for d in range(topo.n_switches):
+                for h in path_hops(rt, topo, int(s), int(d)):
+                    # a hop out of a memory switch means transit through it
+                    assert not topo.is_mem[src[h]]
+
+
+def test_per_destination_routes_form_intree():
+    topo = build_xcym(4, 4, Fabric.INTERPOSER)
+    rt = compute_routing(topo)
+    src, dst, _ = _all_links(topo, topo.phy, 3.0)
+    # for destination d, next hop is a function of current switch only =>
+    # following it must strictly decrease dist-to-d
+    for d in [0, 17, 40, 66]:
+        for s in range(topo.n_switches):
+            if s == d:
+                continue
+            h = rt.next_out[s, d]
+            assert h < len(src)
+            nxt = int(dst[h])
+            assert rt.dist[nxt, d] < rt.dist[s, d]
+
+
+def test_xy_order_within_chip():
+    """Within one chip mesh, routing is X-first dimension order."""
+    topo = build_xcym(1, 4, Fabric.SUBSTRATE)
+    rt = compute_routing(topo)
+    src, dst, _ = _all_links(topo, topo.phy, 3.0)
+    # from switch (0,0)=0 to (5,3)=29 in the 8x8 mesh: all X moves first
+    s, d = 0, 3 * 8 + 5
+    hops = path_hops(rt, topo, s, d)
+    moves = []
+    for h in hops:
+        dx = topo.pos_mm[dst[h], 0] - topo.pos_mm[src[h], 0]
+        moves.append("x" if abs(dx) > 0 else "y")
+    assert moves == sorted(moves)  # all x before all y

@@ -1,0 +1,52 @@
+"""Serving engine: slot refill, completion, sampler behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.models.model import Model
+from repro.serve.engine import Engine, Request
+from repro.serve.sampler import SamplerConfig, sample
+
+
+def test_sampler_greedy_and_topk():
+    logits = jnp.array([[0.0, 5.0, 1.0], [3.0, 0.0, 0.0]])
+    assert sample(logits, jax.random.key(0),
+                  SamplerConfig(temperature=0.0)).tolist() == [1, 0]
+    # top-1 sampling == greedy
+    out = sample(logits, jax.random.key(0),
+                 SamplerConfig(temperature=1.0, top_k=1))
+    assert out.tolist() == [1, 0]
+    # top-p=tiny keeps only the argmax
+    out = sample(logits, jax.random.key(1),
+                 SamplerConfig(temperature=1.0, top_p=0.01))
+    assert out.tolist() == [1, 0]
+
+
+def test_engine_serves_more_requests_than_slots():
+    cfg = get_config("granite-8b").smoke()
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    eng = Engine(model, params, slots=2, max_seq=32)
+    reqs = [Request(rid=i, prompt=[1, 2, 3], max_new=4) for i in range(5)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run(max_ticks=200)
+    assert all(r.done for r in reqs)
+    assert all(len(r.out) == 4 for r in reqs)
+
+
+def test_engine_greedy_deterministic():
+    cfg = get_config("mamba2-1.3b").smoke()
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+
+    def serve_once():
+        eng = Engine(model, params, slots=1, max_seq=32,
+                     sampler=SamplerConfig(temperature=0.0))
+        r = Request(rid=0, prompt=[5, 6, 7], max_new=6)
+        eng.submit(r)
+        eng.run(max_ticks=100)
+        return r.out
+
+    assert serve_once() == serve_once()

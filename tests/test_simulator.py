@@ -1,0 +1,216 @@
+"""Flit-simulator behaviour: conservation, latency bounds, MAC semantics."""
+import numpy as np
+import pytest
+
+from repro.core import simulator, traffic
+from repro.core.constants import (DEFAULT_PHY, Fabric, MacMode, PhyParams,
+                                  SimParams)
+from repro.core.metrics import compute_metrics, inflight_flits
+from repro.core.routing import compute_routing
+from repro.core.sweep import run_point
+from repro.core.topology import build_xcym
+
+
+def _single_packet(fabric, src, dst, phy=None, cycles=400,
+                   sim=None):
+    phy = phy or DEFAULT_PHY
+    topo = build_xcym(4, 4, fabric, phy)
+    rt = compute_routing(topo)
+    sim = sim or SimParams(cycles=cycles, warmup=0)
+    core_sw = np.nonzero(topo.is_core)[0]
+    n = len(core_sw)
+    births = np.full((n, 8), traffic.NO_PKT, np.int32)
+    dests = np.zeros((n, 8), np.int32)
+    si = int(np.nonzero(core_sw == src)[0][0])
+    births[si, 0] = 0
+    dests[si, 0] = dst
+    tt = traffic.TrafficTable(core_sw.astype(np.int32), births, dests, 0.0)
+    ps = simulator.pack(topo, rt, tt, phy, sim)
+    st = simulator.run(ps, cycles=cycles)
+    return topo, rt, ps, st
+
+
+def test_single_packet_neighbor_latency_exact():
+    """1 hop: inject(1) + link latency (3-stage switch + wire = 4) + eject."""
+    phy = PhyParams(pkt_flits=1)
+    _, _, _, st = _single_packet(Fabric.WIRELESS, 0, 1, phy=phy)
+    assert int(st.pkts_del) == 1
+    assert float(st.lat_sum) == 6.0
+
+
+def test_single_packet_streams_at_link_rate():
+    """64-flit packet adds exactly 63 cycles over the 1-flit latency."""
+    for fabric in (Fabric.WIRELESS, Fabric.INTERPOSER):
+        p1 = PhyParams(pkt_flits=1)
+        p64 = PhyParams(pkt_flits=64)
+        _, _, _, s1 = _single_packet(fabric, 0, 1, phy=p1)
+        _, _, _, s64 = _single_packet(fabric, 0, 1, phy=p64)
+        assert float(s64.lat_sum) == float(s1.lat_sum) + 63
+
+
+def test_single_packet_crosses_wireless():
+    topo, rt, ps, st = _single_packet(Fabric.WIRELESS, 0, 63)
+    assert int(st.pkts_del) == 1
+    assert int(st.flits_del) == 64
+    # path used the air: wireless rx buffer saw traffic
+    rx0 = int(ps.ss.rx0)
+    assert np.asarray(st.counts_into)[rx0:rx0 + 8].sum() > 0
+    # nothing left inside the network
+    assert inflight_flits(st) == 0
+
+
+@pytest.mark.parametrize("fabric", list(Fabric))
+def test_flit_conservation(fabric):
+    """injected == delivered + in-network, at several loads."""
+    sim = SimParams(cycles=1500, warmup=0)
+    for load in (0.05, 0.5):
+        topo = build_xcym(4, 4, fabric)
+        rt = compute_routing(topo)
+        tt = traffic.uniform_random(topo, load, 0.2, sim.cycles, 64, seed=3)
+        ps = simulator.pack(topo, rt, tt, DEFAULT_PHY, sim)
+        st = simulator.run(ps)
+        assert int(st.flits_inj) == int(st.flits_del) + inflight_flits(st)
+
+
+def test_no_buffer_overflow():
+    sim = SimParams(cycles=1200, warmup=0)
+    topo = build_xcym(4, 4, Fabric.WIRELESS)
+    rt = compute_routing(topo)
+    tt = traffic.uniform_random(topo, 1.0, 0.3, sim.cycles, 64, seed=5)
+    ps = simulator.pack(topo, rt, tt, DEFAULT_PHY, sim)
+    st = simulator.run(ps)
+    occ = np.where(np.asarray(st.pkt_src) >= 0,
+                   np.asarray(st.rcvd) - np.asarray(st.sent), 0)
+    inflight = np.asarray(st.pipe).sum(-1)
+    depth = np.asarray(ps.ss.b_depth)[:, None]
+    assert (occ >= 0).all()
+    assert (occ + inflight <= depth).all()
+
+
+def test_vc_class_partition():
+    """Non-rx buffers: VCs 0..3 hold only phase-1, 4..7 only phase-2."""
+    sim = SimParams(cycles=1500, warmup=0)
+    topo = build_xcym(4, 4, Fabric.WIRELESS)
+    rt = compute_routing(topo)
+    tt = traffic.uniform_random(topo, 0.8, 0.2, sim.cycles, 64, seed=7)
+    ps = simulator.pack(topo, rt, tt, DEFAULT_PHY, sim)
+    st = simulator.run(ps)
+    active = np.asarray(st.pkt_src) >= 0
+    ph2 = np.asarray(st.phase2)
+    is_rx = np.asarray(ps.ss.b_is_rx)
+    V = simulator.V
+    for b in range(ps.B):
+        if is_rx[b]:
+            continue
+        for v in range(V):
+            if active[b, v]:
+                assert ph2[b, v] == (v >= V // 2), (b, v)
+
+
+def test_wireless_medium_capacity_order():
+    """crossbar >= matching >= single on delivered throughput."""
+    sim = SimParams(cycles=2500, warmup=500)
+    thr = {}
+    for medium, cyc in [("crossbar", 1), ("matching", 1), ("single", 5)]:
+        phy = PhyParams(wireless_medium=medium, wireless_flit_cycles=cyc)
+        m = run_point(4, 4, Fabric.WIRELESS, load=0.5, sim=sim, phy=phy)
+        thr[medium] = m.throughput
+    assert thr["crossbar"] >= thr["matching"] >= thr["single"]
+
+
+def test_control_packet_mac_beats_token():
+    """§III.D: partial-packet control MAC outperforms whole-packet token.
+
+    Throughput compared at saturation; latency below saturation (at
+    saturation, admission bias makes average latency incomparable).
+    """
+    sim_cp = SimParams(cycles=2500, warmup=500, mac=MacMode.CONTROL_PACKET)
+    sim_tk = SimParams(cycles=2500, warmup=500, mac=MacMode.TOKEN)
+    m_cp = run_point(4, 4, Fabric.WIRELESS, load=0.5, sim=sim_cp)
+    m_tk = run_point(4, 4, Fabric.WIRELESS, load=0.5, sim=sim_tk)
+    assert m_cp.throughput >= m_tk.throughput
+    l_cp = run_point(4, 4, Fabric.WIRELESS, load=0.08, sim=sim_cp)
+    l_tk = run_point(4, 4, Fabric.WIRELESS, load=0.08, sim=sim_tk)
+    # token MAC waits for the whole 64-flit packet to buffer at the WI
+    assert l_cp.avg_pkt_latency < l_tk.avg_pkt_latency
+
+
+def test_sleepy_rx_saves_energy():
+    sim_on = SimParams(cycles=2000, warmup=400, sleepy_rx=True)
+    sim_off = SimParams(cycles=2000, warmup=400, sleepy_rx=False)
+    m_on = run_point(4, 4, Fabric.WIRELESS, load=0.1, sim=sim_on)
+    m_off = run_point(4, 4, Fabric.WIRELESS, load=0.1, sim=sim_off)
+    assert m_on.avg_pkt_energy_pj < m_off.avg_pkt_energy_pj
+
+
+def test_paper_headline_ordering():
+    """Fig 2/3: wireless beats interposer beats substrate at 4C4M."""
+    sim = SimParams(cycles=3000, warmup=600)
+    mw = run_point(4, 4, Fabric.WIRELESS, load=0.05, sim=sim)
+    mi = run_point(4, 4, Fabric.INTERPOSER, load=0.05, sim=sim)
+    ms = run_point(4, 4, Fabric.SUBSTRATE, load=0.05, sim=sim)
+    assert mw.avg_pkt_energy_pj < mi.avg_pkt_energy_pj < ms.avg_pkt_energy_pj
+    assert mw.avg_pkt_latency < mi.avg_pkt_latency < ms.avg_pkt_latency
+    sw = run_point(4, 4, Fabric.WIRELESS, load=1.0, sim=sim)
+    si = run_point(4, 4, Fabric.INTERPOSER, load=1.0, sim=sim)
+    ss_ = run_point(4, 4, Fabric.SUBSTRATE, load=1.0, sim=sim)
+    assert sw.throughput > si.throughput > ss_.throughput
+
+
+def test_metrics_energy_breakdown_sums():
+    sim = SimParams(cycles=1500, warmup=300)
+    m = run_point(4, 4, Fabric.WIRELESS, load=0.2, sim=sim)
+    total = sum(m.energy_breakdown.values())
+    assert m.avg_pkt_energy_pj == pytest.approx(
+        total / max(m.pkts_delivered, 1), rel=1e-6)
+
+
+def test_serial_link_serialization_exact():
+    """Substrate chip-chip serial I/O: 6 cycles/flit tail serialization."""
+    phy1 = PhyParams(pkt_flits=1)
+    phy8 = PhyParams(pkt_flits=8)
+    topo = build_xcym(4, 4, Fabric.SUBSTRATE, phy1)
+    # pick src next to the serial link so the path crosses exactly once
+    _, _, _, s1 = _single_packet(Fabric.SUBSTRATE, 0, 35, phy=phy1)
+    _, _, _, s8 = _single_packet(Fabric.SUBSTRATE, 0, 35, phy=phy8)
+    assert int(s1.pkts_del) == 1 and int(s8.pkts_del) == 1
+    # each extra flit waits serial_flit_cycles at the slowest stage
+    assert float(s8.lat_sum) == float(s1.lat_sum) \
+        + 7 * phy1.serial_flit_cycles
+
+
+def test_two_packets_same_path_contend():
+    """Second packet on the same single-link path is delayed by ~pkt_len."""
+    phy = PhyParams(pkt_flits=16)
+    topo = build_xcym(4, 4, Fabric.WIRELESS, phy)
+    rt = compute_routing(topo)
+    sim = SimParams(cycles=400, warmup=0)
+    core_sw = np.nonzero(topo.is_core)[0]
+    n = len(core_sw)
+    births = np.full((n, 8), traffic.NO_PKT, np.int32)
+    dests = np.zeros((n, 8), np.int32)
+    births[0, 0], dests[0, 0] = 0, 1     # A: sw0 -> sw1
+    births[0, 1], dests[0, 1] = 0, 1     # B: same source, same dest
+    tt = traffic.TrafficTable(core_sw.astype(np.int32), births, dests, 0.0)
+    ps = simulator.pack(topo, rt, tt, phy, sim)
+    st = simulator.run(ps, cycles=400)
+    assert int(st.pkts_del) == 2
+    # one packet takes 6+15=21; two back-to-back: second tail ~16 later
+    total = float(st.lat_sum)
+    assert 21 + 35 <= total <= 21 + 45, total
+
+
+def test_energy_single_packet_exact():
+    """Energy of one packet = per-hop link+switch energies, exactly."""
+    phy = PhyParams(pkt_flits=4)
+    topo, rt, ps, st = _single_packet(Fabric.WIRELESS, 0, 1,
+                                      phy=phy)
+    from repro.core.metrics import compute_metrics
+    m = compute_metrics(ps, st, "one", 0.0, cycles=400)
+    bits = 4 * 32
+    # path: inject -> sw0 -> (mesh link 2.5mm) -> sw1 -> eject
+    e_link = bits * phy.e_wire_pj_bit_mm * phy.mesh_hop_mm
+    e_switch = bits * phy.e_switch_pj_bit * 2   # fwd at sw0 + eject at sw1
+    expected = e_link + e_switch
+    got = m.energy_breakdown["links"] + m.energy_breakdown["switch"]
+    assert got == pytest.approx(expected, rel=1e-6), (got, expected)

@@ -1,0 +1,85 @@
+"""Topology builder invariants (paper §III.A / §IV.A)."""
+import numpy as np
+import pytest
+
+from repro.core.constants import Fabric, LinkClass, PhyParams
+from repro.core.topology import build_xcym
+
+
+@pytest.mark.parametrize("nc,nm", [(1, 4), (4, 4), (8, 4), (2, 2)])
+@pytest.mark.parametrize("fabric", list(Fabric))
+def test_counts(nc, nm, fabric):
+    t = build_xcym(nc, nm, fabric)
+    assert t.n_cores == 64
+    assert t.n_mem == nm
+    assert t.n_switches == 64 + nm
+    assert (t.chip_of[t.is_mem] >= nc).all()
+    # bidirectional links come in pairs
+    assert t.n_links % 2 == 0
+
+
+def test_fabric_link_classes():
+    sub = build_xcym(4, 4, Fabric.SUBSTRATE)
+    itp = build_xcym(4, 4, Fabric.INTERPOSER)
+    wl = build_xcym(4, 4, Fabric.WIRELESS)
+    assert (sub.link_cls == LinkClass.SERIAL).sum() > 0
+    assert (sub.link_cls == LinkClass.WIDEIO).sum() == 4 * 4 * 2  # 4ch x 4 stacks
+    assert (itp.link_cls == LinkClass.INTERPOSER).sum() > 0
+    assert (itp.link_cls == LinkClass.SERIAL).sum() == 0
+    # wireless fabric has no wired inter-chip or memory links
+    assert set(np.unique(wl.link_cls)) == {int(LinkClass.MESH)}
+    assert wl.n_wi == 4 + 4          # 1 WI / 16-core chip + 1 / stack
+    w8 = build_xcym(8, 4, Fabric.WIRELESS)
+    assert w8.n_wi == 8 + 4          # 1 WI / chip (8 cores) + stacks
+
+
+def test_wireless_1c_has_cluster_wis():
+    w1 = build_xcym(1, 4, Fabric.WIRELESS)
+    assert w1.n_wi == 4 + 4          # 4 quadrant WIs + 4 memory WIs
+    # chip WIs sit at distinct quadrant centers
+    chip_wis = [s for s in w1.wi_switch if w1.is_core[s]]
+    assert len(set(chip_wis)) == 4
+
+
+def test_xy_link_ordering():
+    """All X-direction mesh/crossing links precede Y links (=> XY routing)."""
+    for fabric in (Fabric.INTERPOSER, Fabric.WIRELESS, Fabric.SUBSTRATE):
+        t = build_xcym(4, 4, fabric)
+        horiz = []
+        for l in range(t.n_links):
+            if t.link_cls[l] in (LinkClass.MESH, LinkClass.INTERPOSER,
+                                 LinkClass.SERIAL):
+                dx = abs(t.pos_mm[t.link_dst[l], 0] - t.pos_mm[t.link_src[l], 0])
+                dy = abs(t.pos_mm[t.link_dst[l], 1] - t.pos_mm[t.link_src[l], 1])
+                horiz.append(dx > dy)
+        horiz = np.asarray(horiz)
+        first_y = int(np.argmin(horiz)) if not horiz.all() else len(horiz)
+        assert horiz[:first_y].all() and not horiz[first_y:].any()
+
+
+def test_memory_is_leaf():
+    """Memory stacks attach only via WIDEIO (wired fabrics)."""
+    for fabric in (Fabric.SUBSTRATE, Fabric.INTERPOSER):
+        t = build_xcym(4, 4, fabric)
+        mem = np.nonzero(t.is_mem)[0]
+        for m in mem:
+            touching = (t.link_src == m) | (t.link_dst == m)
+            assert (t.link_cls[touching] == LinkClass.WIDEIO).all()
+
+
+def test_near_square_global_array():
+    t8 = build_xcym(8, 4, Fabric.WIRELESS)
+    xs = t8.pos_mm[t8.is_core, 0]
+    ys = t8.pos_mm[t8.is_core, 1]
+    w = xs.max() - xs.min()
+    h = ys.max() - ys.min()
+    assert 0.5 < w / h < 2.0
+
+
+def test_interposer_parallel_links_ablation():
+    phy = PhyParams(interposer_links_per_pair=2)
+    t1 = build_xcym(4, 4, Fabric.INTERPOSER)
+    t2 = build_xcym(4, 4, Fabric.INTERPOSER, phy)
+    n1 = (t1.link_cls == LinkClass.INTERPOSER).sum()
+    n2 = (t2.link_cls == LinkClass.INTERPOSER).sum()
+    assert n2 == 2 * n1
