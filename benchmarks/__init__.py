@@ -1,0 +1,31 @@
+"""Benchmark package setup.
+
+Runs before any benchmark module (``python -m benchmarks.<mod>`` imports
+the package first), which is the only moment XLA flags can still be set:
+the batched sweep engine shards point groups across host devices, so we
+split the CPU into a few virtual XLA devices before jax initializes.
+An operator-provided setting always wins.
+
+Also puts ``src/`` on ``sys.path`` so ``python -m benchmarks.run`` works
+without an explicit ``PYTHONPATH`` (mirroring pyproject's pytest config).
+"""
+import os
+import pathlib
+import sys
+
+_SRC = str(pathlib.Path(__file__).resolve().parent.parent / "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+_FLAG = "--xla_force_host_platform_device_count"
+
+
+def _setup_host_devices() -> None:
+    if _FLAG in os.environ.get("XLA_FLAGS", ""):
+        return
+    n = max(2, min(4, os.cpu_count() or 1))
+    os.environ["XLA_FLAGS"] = \
+        (os.environ.get("XLA_FLAGS", "") + f" {_FLAG}={n}").strip()
+
+
+_setup_host_devices()

@@ -4,52 +4,62 @@
 - MAC: control-packet (partial packets) vs token (whole packets) [7]
 - sleepy receivers on/off [17]
 - interposer wire budget: 1 vs 2 parallel links per boundary pair [2]
+- WI deployment density (§III.A)
+
+The medium/MAC/sleepy variants all share the 4C4M wireless bucket shape, so
+the whole ablation block is submitted as one batched sweep.
 """
 from repro.core.constants import Fabric, MacMode, PhyParams, SimParams
-from repro.core.sweep import run_point
+from repro.core.sweep import SweepPoint, run_sweep_batched
 
 from benchmarks.common import SIM, emit, gain, reduction
 
 
 def main() -> None:
     emit("ablation,variant,thr,lat,energy_pj_pkt")
-    base = run_point(4, 4, Fabric.WIRELESS, load=1.0, sim=SIM)
+    sim_tok = SimParams(cycles=SIM.cycles, warmup=SIM.warmup,
+                        mac=MacMode.TOKEN)
+    sim_nosleep = SimParams(cycles=SIM.cycles, warmup=SIM.warmup,
+                            sleepy_rx=False)
+    pts = [
+        SweepPoint(4, 4, Fabric.WIRELESS, load=1.0, sim=SIM),
+        SweepPoint(4, 4, Fabric.WIRELESS, load=1.0, sim=SIM,
+                   phy=PhyParams(wireless_medium="matching")),
+        SweepPoint(4, 4, Fabric.WIRELESS, load=1.0, sim=SIM,
+                   phy=PhyParams(wireless_medium="single",
+                                 wireless_flit_cycles=5)),
+        SweepPoint(4, 4, Fabric.WIRELESS, load=1.0, sim=sim_tok),
+        SweepPoint(4, 4, Fabric.WIRELESS, load=0.1, sim=sim_nosleep),
+        SweepPoint(4, 4, Fabric.WIRELESS, load=0.1, sim=SIM),
+    ]
+    base, match, single, tok, nosleep, sleep = run_sweep_batched(pts)
+
     emit(f"ablation,crossbar(default),{base.throughput:.4f},"
          f"{base.avg_pkt_latency:.1f},{base.avg_pkt_energy_pj:.0f}")
-    for name, phy in [
-        ("matching", PhyParams(wireless_medium="matching")),
-        ("single_channel_strict",
-         PhyParams(wireless_medium="single", wireless_flit_cycles=5)),
-    ]:
-        m = run_point(4, 4, Fabric.WIRELESS, load=1.0, sim=SIM, phy=phy)
+    for name, m in [("matching", match), ("single_channel_strict", single)]:
         emit(f"ablation,{name},{m.throughput:.4f},{m.avg_pkt_latency:.1f},"
              f"{m.avg_pkt_energy_pj:.0f}")
-
-    tok = run_point(4, 4, Fabric.WIRELESS, load=1.0,
-                    sim=SimParams(cycles=SIM.cycles, warmup=SIM.warmup,
-                                  mac=MacMode.TOKEN))
     emit(f"ablation,token_mac,{tok.throughput:.4f},{tok.avg_pkt_latency:.1f},"
          f"{tok.avg_pkt_energy_pj:.0f}")
     emit(f"ablation.derived,ctrl_mac_thr_gain_pct,"
          f"{gain(base.throughput, tok.throughput):.1f}")
-
-    nosleep = run_point(4, 4, Fabric.WIRELESS, load=0.1,
-                        sim=SimParams(cycles=SIM.cycles, warmup=SIM.warmup,
-                                      sleepy_rx=False))
-    sleep = run_point(4, 4, Fabric.WIRELESS, load=0.1, sim=SIM)
     emit(f"ablation.derived,sleepy_rx_energy_saving_pct,"
          f"{reduction(sleep.avg_pkt_energy_pj, nosleep.avg_pkt_energy_pj):.1f}")
 
     phy2 = PhyParams(interposer_links_per_pair=2)
-    for nc in (4, 8):
-        mw = run_point(nc, 4, Fabric.WIRELESS, load=1.0, sim=SIM, phy=phy2)
-        mi = run_point(nc, 4, Fabric.INTERPOSER, load=1.0, sim=SIM, phy=phy2)
+    x2 = run_sweep_batched([
+        SweepPoint(nc, 4, fab, load=1.0, sim=SIM, phy=phy2)
+        for nc in (4, 8)
+        for fab in (Fabric.WIRELESS, Fabric.INTERPOSER)])
+    for j, nc in enumerate((4, 8)):
+        mw, mi = x2[2 * j], x2[2 * j + 1]
         emit(f"ablation,interposer_x2_{nc}C4M_bw_gain_pct,"
              f"{gain(mw.throughput, mi.throughput):.1f},,")
 
     # beyond-paper: WI deployment density (§III.A: "the number of clusters
     # per chip will depend on the WI density") — 1C4M with 4/8/16-core
-    # clusters (16/8/4 chip WIs)
+    # clusters (16/8/4 chip WIs); custom topologies go through the raw
+    # simulator API
     from repro.core import simulator, traffic
     from repro.core.routing import compute_routing
     from repro.core.topology import build_xcym

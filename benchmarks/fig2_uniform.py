@@ -1,17 +1,22 @@
 """Fig. 2: peak achievable bandwidth/core + average packet energy, uniform
-random traffic at saturation, 4C4M, 20% memory accesses."""
+random traffic at saturation, 4C4M, 20% memory accesses.
+
+All three fabrics ride one batched launch (their pack dims are harmonized
+by ``run_sweep_batched``).
+"""
 from repro.core.constants import Fabric
-from repro.core.sweep import run_point
+from repro.core.sweep import SweepPoint, run_sweep_batched
 
 from benchmarks.common import FABRICS, SIM, emit, gain, reduction
 
 
 def main() -> None:
     emit("fig2,fabric,bw_gbps_core,avg_pkt_energy_pj,thr_flits_cyc_core")
-    results = {}
+    ms = run_sweep_batched([
+        SweepPoint(4, 4, f, load=1.0, p_mem=0.2, sim=SIM) for f in FABRICS])
+    results = dict(zip(FABRICS, ms))
     for f in FABRICS:
-        m = run_point(4, 4, f, load=1.0, p_mem=0.2, sim=SIM)
-        results[f] = m
+        m = results[f]
         emit(f"fig2,{f.name},{m.bw_gbps_core:.3f},{m.avg_pkt_energy_pj:.0f},"
              f"{m.throughput:.4f}")
     w, i, s = (results[Fabric.WIRELESS], results[Fabric.INTERPOSER],

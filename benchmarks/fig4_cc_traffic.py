@@ -1,8 +1,12 @@
 """Fig. 4: % gain in bandwidth and packet energy of the wireless multichip
 system vs the interposer baseline, as chip-to-chip traffic grows with
-disintegration (1C4M -> 4C4M -> 8C4M; off-chip traffic 20% -> 80% -> 90%)."""
+disintegration (1C4M -> 4C4M -> 8C4M; off-chip traffic 20% -> 80% -> 90%).
+
+Each system size is a wireless/interposer pair in one batched group
+(different sizes have different source counts, so they batch separately).
+"""
 from repro.core.constants import Fabric
-from repro.core.sweep import run_point
+from repro.core.sweep import SweepPoint, run_sweep_batched
 
 from benchmarks.common import SIM, emit, gain, reduction
 
@@ -11,9 +15,13 @@ def main() -> None:
     emit("fig4,config,off_chip_frac,bw_gain_pct,energy_gain_pct,"
          "thr_wireless,thr_interposer")
     off = {1: 0.20, 4: 0.80, 8: 0.90}
-    for nc in (1, 4, 8):
-        mw = run_point(nc, 4, Fabric.WIRELESS, load=1.0, p_mem=0.2, sim=SIM)
-        mi = run_point(nc, 4, Fabric.INTERPOSER, load=1.0, p_mem=0.2, sim=SIM)
+    sizes = (1, 4, 8)
+    ms = run_sweep_batched([
+        SweepPoint(nc, 4, fab, load=1.0, p_mem=0.2, sim=SIM)
+        for nc in sizes
+        for fab in (Fabric.WIRELESS, Fabric.INTERPOSER)])
+    for j, nc in enumerate(sizes):
+        mw, mi = ms[2 * j], ms[2 * j + 1]
         bw = gain(mw.throughput, mi.throughput)
         en = reduction(mw.avg_pkt_energy_pj, mi.avg_pkt_energy_pj)
         emit(f"fig4,{nc}C4M,{off[nc]},{bw:.1f},{en:.1f},"

@@ -1,17 +1,25 @@
 """Fig. 5: % gain in bandwidth and packet energy vs the interposer baseline
-as the memory-access fraction varies 20% -> 80% (4C4M)."""
+as the memory-access fraction varies 20% -> 80% (4C4M).
+
+The 4 x 2 (p_mem, fabric) grid runs as one batched sweep group.
+"""
 from repro.core.constants import Fabric
-from repro.core.sweep import run_point
+from repro.core.sweep import SweepPoint, run_sweep_batched
 
 from benchmarks.common import SIM, emit, gain, reduction
+
+P_MEMS = (0.2, 0.4, 0.6, 0.8)
 
 
 def main() -> None:
     emit("fig5,p_mem,bw_gain_pct,energy_gain_pct,thr_wireless,thr_interposer")
+    ms = run_sweep_batched([
+        SweepPoint(4, 4, fab, load=1.0, p_mem=pm, sim=SIM)
+        for pm in P_MEMS
+        for fab in (Fabric.WIRELESS, Fabric.INTERPOSER)])
     gains = []
-    for pm in (0.2, 0.4, 0.6, 0.8):
-        mw = run_point(4, 4, Fabric.WIRELESS, load=1.0, p_mem=pm, sim=SIM)
-        mi = run_point(4, 4, Fabric.INTERPOSER, load=1.0, p_mem=pm, sim=SIM)
+    for j, pm in enumerate(P_MEMS):
+        mw, mi = ms[2 * j], ms[2 * j + 1]
         bw = gain(mw.throughput, mi.throughput)
         en = reduction(mw.avg_pkt_energy_pj, mi.avg_pkt_energy_pj)
         gains.append((bw, en))

@@ -3,9 +3,10 @@
 (SynFull-style models of PARSEC/SPLASH2 benchmarks, DESIGN.md §7.2).
 
 The network is NOT saturated here (latency is the meaningful metric, §IV.D).
+All (app, fabric) pairs ride one batched sweep.
 """
 from repro.core.constants import Fabric
-from repro.core.sweep import run_point
+from repro.core.sweep import SweepPoint, run_sweep_batched
 from repro.core.traffic import APP_MODELS
 
 from benchmarks.common import SIM, emit, reduction
@@ -14,10 +15,14 @@ from benchmarks.common import SIM, emit, reduction
 def main() -> None:
     emit("fig6,app,lat_reduction_pct,energy_reduction_pct,"
          "lat_wireless,lat_interposer")
+    apps = list(APP_MODELS)
+    ms = run_sweep_batched([
+        SweepPoint(4, 4, fab, load=1.0, app=app, sim=SIM)
+        for app in apps
+        for fab in (Fabric.WIRELESS, Fabric.INTERPOSER)])
     lat_red, en_red = [], []
-    for app in APP_MODELS:
-        mw = run_point(4, 4, Fabric.WIRELESS, load=1.0, app=app, sim=SIM)
-        mi = run_point(4, 4, Fabric.INTERPOSER, load=1.0, app=app, sim=SIM)
+    for j, app in enumerate(apps):
+        mw, mi = ms[2 * j], ms[2 * j + 1]
         lr = reduction(mw.avg_pkt_latency, mi.avg_pkt_latency)
         er = reduction(mw.avg_pkt_energy_pj, mi.avg_pkt_energy_pj)
         lat_red.append(lr)

@@ -1,26 +1,100 @@
-"""Simulator performance microbenchmark: simulated cycles per second."""
+"""Simulator performance microbenchmark.
+
+Reports, on a fixed 8-point grid (2 fabrics x 4 loads, 4C4M):
+
+- single-point simulated cycles per second (scatter-free engine),
+- sequential points/sec: a Python loop over ``run_point`` (one XLA launch
+  per point — the pre-batching execution model),
+- batched points/sec: the same grid through ``run_sweep_batched`` (grouped
+  into one launch per bucket shape, sharded across host devices),
+- reference points/sec: the original scatter/segment engine
+  (``simulator_ref``), i.e. the seed's per-point path, and
+- the resulting speedups.  Batched-vs-reference is the end-to-end win of
+  this engine (scatter-free step + batching + device sharding); batched-vs-
+  sequential isolates the batching/sharding share on the same step.
+
+A correctness line asserts batched metrics == sequential metrics.
+"""
 import time
 
-from repro.core import simulator, traffic
+from repro.core import simulator, simulator_ref, traffic
 from repro.core.constants import DEFAULT_PHY, Fabric, SimParams
 from repro.core.routing import compute_routing
+from repro.core.sweep import SweepPoint, run_point, run_sweep_batched
 from repro.core.topology import build_xcym
 
 from benchmarks.common import emit
 
+SIM = SimParams(cycles=2000, warmup=400)
+GRID = [(fab, load)
+        for fab in (Fabric.WIRELESS, Fabric.INTERPOSER)
+        for load in (0.05, 0.2, 0.5, 1.0)]
+REF_POINTS = 2          # reference engine is slow; extrapolate points/sec
+
 
 def main() -> None:
+    pts = [SweepPoint(4, 4, fab, load=load, sim=SIM) for fab, load in GRID]
+    G = len(pts)
+
+    # single-point cycle rate (continuity with the seed's simspeed output)
     topo = build_xcym(4, 4, Fabric.WIRELESS)
     rt = compute_routing(topo)
-    sim = SimParams(cycles=10_000, warmup=1_000)
-    tt = traffic.uniform_random(topo, 0.3, 0.2, sim.cycles, 64, seed=0)
-    ps = simulator.pack(topo, rt, tt, DEFAULT_PHY, sim)
-    simulator.run(ps, cycles=100)            # compile
+    tt = traffic.uniform_random(topo, 0.3, 0.2, SIM.cycles, 64, seed=0)
+    ps = simulator.pack(topo, rt, tt, DEFAULT_PHY, SIM)
+    simulator.run(ps, cycles=SIM.cycles)     # compile
     t0 = time.perf_counter()
     simulator.run(ps)
     dt = time.perf_counter() - t0
-    emit(f"simspeed,cycles_per_sec,{sim.cycles/dt:.0f}")
-    emit(f"simspeed,us_per_cycle,{dt/sim.cycles*1e6:.1f}")
+    emit(f"simspeed,cycles_per_sec,{SIM.cycles/dt:.0f}")
+    emit(f"simspeed,us_per_cycle,{dt/SIM.cycles*1e6:.1f}")
+
+    # sequential: one launch per point (compile once via a first pass)
+    def seq_run():
+        return [run_point(4, 4, fab, load=load, sim=SIM)
+                for fab, load in GRID]
+
+    seq_run()                                # compile
+    t0 = time.perf_counter()
+    ms_seq = seq_run()
+    t_seq = time.perf_counter() - t0
+
+    # batched: whole grid per launch
+    run_sweep_batched(pts)                   # compile
+    t0 = time.perf_counter()
+    ms_bat = run_sweep_batched(pts)
+    t_bat = time.perf_counter() - t0
+
+    same = all(
+        a.pkts_delivered == b.pkts_delivered
+        and a.flits_delivered == b.flits_delivered
+        and a.throughput == b.throughput
+        for a, b in zip(ms_seq, ms_bat))
+    emit(f"simspeed,grid_points,{G}")
+    emit(f"simspeed.check,batched_equals_sequential,{same}")
+    if not same:
+        # hard-fail: this is the only place CI exercises the multi-device
+        # pmap-sharded batch path (pytest sees a single device)
+        raise SystemExit("simspeed: batched metrics diverged from sequential")
+    emit(f"simspeed,seq_points_per_sec,{G/t_seq:.3f}")
+    emit(f"simspeed,batched_points_per_sec,{G/t_bat:.3f}")
+
+    # reference engine (the seed's scatter/segment step, per-point launches)
+    ref = []
+    for fab, load in GRID[:REF_POINTS]:
+        topo_r = build_xcym(4, 4, fab)
+        rt_r = compute_routing(topo_r)
+        tt_r = traffic.uniform_random(topo_r, load, 0.2, SIM.cycles, 64,
+                                      seed=SIM.seed)
+        ref.append(simulator_ref.pack(topo_r, rt_r, tt_r, DEFAULT_PHY, SIM))
+    simulator_ref.run(ref[0])                # compile
+    t0 = time.perf_counter()
+    for r in ref:
+        simulator_ref.run(r)
+    t_ref = (time.perf_counter() - t0) / REF_POINTS
+    emit(f"simspeed,ref_seq_points_per_sec,{1/t_ref:.3f}")
+    emit(f"simspeed,speedup_batched_vs_seq,{t_seq/t_bat:.2f}")
+    emit(f"simspeed,speedup_batched_vs_ref_seq,{t_ref*G/t_bat:.2f}")
+    emit(f"simspeed,speedup_seq_vs_ref_seq,{t_ref*G/t_seq:.2f}")
 
 
 if __name__ == "__main__":

@@ -9,11 +9,18 @@
   floating-point accumulation error enters the energy numbers.
 - average packet latency: generation -> tail-ejection, packets born after
   warm-up.
+
+The energy terms are reduced on-device by a ``jax.vmap``-ed kernel so a
+whole batch of sweep points (``sweep.run_sweep_batched``) is one launch;
+``compute_metrics`` for a single state is the same path with batch size 1.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Sequence
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.constants import PhyParams, SimParams
@@ -40,49 +47,78 @@ class Metrics:
                 f"{self.avg_pkt_energy_pj:.0f}")
 
 
+@jax.jit
+@jax.vmap
+def _energy_terms(b_epb, counts_into, count_switch, ctrl_count,
+                  awake_cycles, sleep_cycles, bits, e_switch_pj_bit,
+                  ctrl_flit_bits_epj, rx_idle, rx_sleep):
+    """Per-point energy components (pJ), vmapped over the batch axis."""
+    e_links = (counts_into * b_epb).sum() * bits
+    e_switch = count_switch.astype(jnp.float32) * bits * e_switch_pj_bit
+    e_ctrl = ctrl_count.astype(jnp.float32) * ctrl_flit_bits_epj
+    e_rx = awake_cycles.astype(jnp.float32) * rx_idle \
+        + sleep_cycles.astype(jnp.float32) * rx_sleep
+    return e_links, e_switch, e_ctrl, e_rx
+
+
+def compute_metrics_batch(pss: Sequence[PackedSim], st: SimState,
+                          names: Sequence[str],
+                          offered_loads: Sequence[float],
+                          cycles: int | None = None) -> list[Metrics]:
+    """Extract §IV metrics for a batched ``SimState`` (leading batch axis)."""
+    f32 = np.float32
+    el, es, ec, er = _energy_terms(
+        jnp.stack([ps.ss.b_epb for ps in pss]),
+        st.counts_into, st.count_switch, st.ctrl_count,
+        st.awake_cycles, st.sleep_cycles,
+        jnp.asarray([f32(ps.phy.flit_bits) for ps in pss]),
+        jnp.asarray([f32(ps.phy.e_switch_pj_bit) for ps in pss]),
+        jnp.asarray([f32(ps.phy.ctrl_packet_flits * ps.phy.flit_bits
+                         * ps.phy.e_wireless_pj_bit) for ps in pss]),
+        jnp.asarray([f32(ps.phy.rx_idle_pj_cycle) for ps in pss]),
+        jnp.asarray([f32(ps.phy.rx_sleep_pj_cycle) for ps in pss]))
+    el, es, ec, er = (np.asarray(x) for x in (el, es, ec, er))
+
+    out = []
+    for g, ps in enumerate(pss):
+        phy: PhyParams = ps.phy
+        sim: SimParams = ps.sim
+        cyc = cycles or sim.cycles
+        window = cyc - sim.warmup
+        bits = phy.flit_bits
+        energy = float(el[g]) + float(es[g]) + float(ec[g]) + float(er[g])
+        pkts = max(int(st.pkts_del[g]), 1)
+        flits = int(st.flits_del[g])
+        lat_pkts = int(st.lat_pkts[g])
+        lat = (float(st.lat_sum[g]) / lat_pkts if lat_pkts else float("nan"))
+        thr = flits / window / ps.n_cores
+        out.append(Metrics(
+            name=names[g],
+            offered_load=offered_loads[g],
+            throughput=thr,
+            bw_gbps_core=thr * bits * phy.clock_ghz,
+            avg_pkt_latency=lat,
+            avg_pkt_energy_pj=energy / pkts,
+            energy_pj_bit=energy / max(flits * bits, 1),
+            pkts_delivered=int(st.pkts_del[g]),
+            flits_delivered=flits,
+            flits_injected=int(st.flits_inj[g]),
+            energy_breakdown=dict(links=float(el[g]), switch=float(es[g]),
+                                  ctrl=float(ec[g]), rx=float(er[g])),
+        ))
+    return out
+
+
 def compute_metrics(ps: PackedSim, st: SimState, name: str,
                     offered_load: float, cycles: int | None = None) -> Metrics:
-    phy: PhyParams = ps.phy
-    sim: SimParams = ps.sim
-    cycles = cycles or sim.cycles
-    window = cycles - sim.warmup
-    bits = phy.flit_bits
-
-    counts = np.asarray(st.counts_into)
-    epb = np.asarray(ps.ss.b_epb)
-    e_links = float((counts * epb).sum()) * bits
-    n_sw = int(st.count_switch)
-    e_switch = n_sw * bits * phy.e_switch_pj_bit
-    e_ctrl = int(st.ctrl_count) * phy.ctrl_packet_flits * bits \
-        * phy.e_wireless_pj_bit
-    e_rx = float(st.awake_cycles) * phy.rx_idle_pj_cycle \
-        + float(st.sleep_cycles) * phy.rx_sleep_pj_cycle
-    energy = e_links + e_switch + e_ctrl + e_rx
-
-    pkts = max(int(st.pkts_del), 1)
-    flits = int(st.flits_del)
-    lat = (float(st.lat_sum) / int(st.lat_pkts)
-           if int(st.lat_pkts) else float("nan"))
-    thr = flits / window / ps.n_cores
-    return Metrics(
-        name=name,
-        offered_load=offered_load,
-        throughput=thr,
-        bw_gbps_core=thr * bits * phy.clock_ghz,
-        avg_pkt_latency=lat,
-        avg_pkt_energy_pj=energy / pkts,
-        energy_pj_bit=energy / max(flits * bits, 1),
-        pkts_delivered=int(st.pkts_del),
-        flits_delivered=flits,
-        flits_injected=int(st.flits_inj),
-        energy_breakdown=dict(links=e_links, switch=e_switch, ctrl=e_ctrl,
-                              rx=e_rx),
-    )
+    """Single-state metrics: the batch path with batch size one."""
+    st_b = jax.tree_util.tree_map(lambda x: np.asarray(x)[None], st)
+    return compute_metrics_batch([ps], st_b, [name], [offered_load],
+                                 cycles=cycles)[0]
 
 
 def inflight_flits(st: SimState) -> int:
     """Flits inside the network (buffers + pipes): conservation checks."""
-    import numpy as _np
-    occ = _np.where(_np.asarray(st.pkt_src) >= 0,
-                    _np.asarray(st.rcvd) - _np.asarray(st.sent), 0)
-    return int(occ.sum() + _np.asarray(st.pipe).sum())
+    occ = np.where(np.asarray(st.pkt_src) >= 0,
+                   np.asarray(st.rcvd) - np.asarray(st.sent), 0)
+    return int(occ.sum() + np.asarray(st.pipe).sum())

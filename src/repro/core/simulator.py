@@ -41,15 +41,41 @@ allocation per target buffer per cycle; time-rotating (round-robin
 equivalent) arbitration priority; an input link's VCs may forward to
 distinct outputs in the same cycle.
 
+Execution strategy (this file's performance core)
+-------------------------------------------------
+The cycle step is written entirely with *static-index gathers, masked
+min-reductions and elementwise ops* — no scatters and no segment ops.
+Arbitration (VC claims, output ports, the wireless sender cap) is resolved
+target-side over **static candidate tables** built at pack time from the
+topology: ``cands[s]`` lists the buffers feeding switch ``s`` and
+``candr[w]`` the buffers that can transmit to wireless receiver ``w``.
+Each contending slot gets a unique priority code
+``score * (B*V+1) + slot_id`` (scores are a rotating permutation, so codes
+never tie) and the winner per target is a masked ``min``.  Flit delivery is
+inverted the same way through ``SimState.src_of``: each (buffer, vc) knows
+which upstream slot feeds it, so arrivals are gathers, not scatters.
+
+This matters because XLA:CPU executes scatters and segment ops as serial
+per-update loops that dominate the cycle cost; the gather/min formulation
+is several times faster per point.  The batched sweep engine
+(`run_batch`, used by ``sweep.run_sweep_batched``) runs N sweep points of
+the same bucket shape as one XLA launch (``lax.map`` over the stacked
+batch — bitwise-identical per-point programs) and shards groups across
+host devices with ``jax.pmap`` when more than one is available.
+``simulator_ref`` preserves the original scatter/segment engine as a
+differential-testing oracle (see tests/test_engine_equivalence.py).
+
 Compile sharing: every topology-dependent quantity is a *padded, traced
 array argument*, so one XLA compilation serves all topologies, fabrics and
-traffic tables of the same bucket shape.
+traffic tables of the same bucket shape.  ``pack(..., floors=...)`` lets
+callers raise the padded dims so heterogeneous points (e.g. different
+fabrics) land on one shape and can share a batch.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -64,6 +90,8 @@ V = 8            # virtual channels per port (paper §IV)
 DEPTH = 16       # buffer depth in flits (paper §IV)
 DMAX = 12        # arrival-pipe depth >= max link latency
 WMAX = 16        # max wireless interfaces
+RXWMAX = 4       # max concurrent rx streams per WI (4-channel stacks, §IV)
+EJ_WAYS = 4      # parallel ejection channels at memory-stack switches
 
 
 def _bucket(n: int, q: int) -> int:
@@ -82,13 +110,21 @@ class SimStatic(NamedTuple):
     b_wi: jnp.ndarray        # [B] WI id at the buffer's switch (-1 none)
     b_is_rx: jnp.ndarray     # [B] bool: wireless rx buffer
     b_ej_ways: jnp.ndarray   # [B] parallel ejection channels at dst switch
-    s_pad: jnp.ndarray       # scalar: padded switch count (eject slot stride)
+    b_src_sw: jnp.ndarray    # [B] switch transmitting into this buffer
+    #                          (dummy S_pad-1 for injection/rx/pad rows)
+    inj_src: jnp.ndarray     # [B] source id whose injection buffer this is (-1)
     # routing
     next_out: jnp.ndarray    # [S, S] routing output id
     o_buf: jnp.ndarray       # [R] target buffer id (dummy B for eject/pad)
-    o_wo: jnp.ndarray        # [R] output arbitration slot (Wout = drop)
+    o_wo: jnp.ndarray        # [R] arbitration key: wired -> link id,
+    #                          eject -> switch id, wireless -> dst WI id
     o_is_wl: jnp.ndarray     # [R] bool wireless pair link
     o_is_ej: jnp.ndarray     # [R] bool ejection
+    # arbitration candidate tables (static per topology)
+    cands: jnp.ndarray       # [S, CS] buffer ids feeding each switch (pad B)
+    candr: jnp.ndarray       # [W, CR] buffer ids able to tx to rx WI (pad B)
+    wi_sw: jnp.ndarray       # [W] switch of each WI (dummy S_pad-1)
+    rxw: jnp.ndarray         # scalar int32: rx sub-channels per WI (>=1)
     # wireless
     n_wi: jnp.ndarray        # scalar int32
     rx0: jnp.ndarray         # scalar int32: first rx buffer id
@@ -125,6 +161,7 @@ class SimState(NamedTuple):
     phase2: jnp.ndarray       # [B, V] bool: packet already crossed wireless
     rcvd: jnp.ndarray         # [B, V]
     sent: jnp.ndarray         # [B, V]
+    src_of: jnp.ndarray       # [B, V] flat upstream slot feeding this vc (-1)
     pipe: jnp.ndarray         # [B, V, DMAX]
     busy_until: jnp.ndarray   # [B]
     wl_busy_until: jnp.ndarray  # scalar: shared-channel mode
@@ -154,6 +191,7 @@ def init_state(B: int, N: int) -> SimState:
         out_is_wl=jnp.zeros((B, V), bool), out_is_ej=jnp.zeros((B, V), bool),
         out_vc=jnp.full((B, V), -1, i32),
         phase2=jnp.zeros((B, V), bool), rcvd=zBV, sent=zBV,
+        src_of=jnp.full((B, V), -1, i32),
         pipe=jnp.zeros((B, V, DMAX), i32), busy_until=jnp.zeros((B,), i32),
         wl_busy_until=jnp.int32(0),
         q_head=jnp.zeros((N,), i32), inj_vc=jnp.full((N,), -1, i32),
@@ -172,17 +210,43 @@ def _route_fields(ss: SimStatic, at_switch: jnp.ndarray, dst: jnp.ndarray):
     return oo, ss.o_buf[oo], ss.o_wo[oo], ss.o_is_wl[oo], ss.o_is_ej[oo]
 
 
-def make_step(B: int, Wout: int):
-    """Build the per-cycle transition function (shapes baked in)."""
+def make_step(B: int):
+    """Build the per-cycle transition function (shapes baked in).
+
+    Scatter-free: arbitration winners are found by masked min over static
+    candidate tables using unique priority codes; delivery uses the
+    ``src_of`` inverse map (see module docstring).
+    """
     NC = B * V
-    BIG = jnp.int32(4 * NC)
+    NCp1 = NC + 1
+    assert NC * (NC + 1) < 2**31, \
+        f"B={B}: priority codes would overflow int32 (B*V must be < 46341)"
+    BIGC = jnp.int32(NC * NCp1)
     flat2d = jnp.arange(NC, dtype=jnp.int32).reshape(B, V)
+    varr = jnp.arange(V, dtype=jnp.int32)
+    vcol = varr[None, :]
+    classA = (jnp.arange(V) < V // 2)                        # [V]
+    b_ids = jnp.arange(B, dtype=jnp.int32)
 
     def step(ss: SimStatic, st: SimState, t: jnp.ndarray) -> SimState:
         i32 = jnp.int32
         t = t.astype(i32)
         post = (t >= ss.warmup).astype(i32)
         rot = t % NC
+        S = ss.next_out.shape[0]
+
+        # static candidate slot indices (flattened (buffer, vc) slots)
+        cw = ss.cands[jnp.clip(ss.b_src_sw, 0, S - 1)]       # [B, CS]
+        cw_ok = (cw < B)[:, :, None]                         # [B, CS, 1]
+        idx_w = jnp.clip(cw, 0, B - 1)[:, :, None] * V + varr[None, None, :]
+        cr_ok = (ss.candr < B)[:, :, None]                   # [W, CR, 1]
+        crc = jnp.clip(ss.candr, 0, B - 1)
+        idx_r = crc[:, :, None] * V + varr[None, None, :]    # [W, CR, V]
+        cs_ok = (ss.cands < B)[:, :, None]                   # [S, CS, 1]
+        csc = jnp.clip(ss.cands, 0, B - 1)
+        idx_s = csc[:, :, None] * V + varr[None, None, :]    # [S, CS, V]
+        tgt_ids = b_ids[:, None, None]                       # [B, 1, 1]
+        rx_tgt = (ss.rx0 + jnp.arange(WMAX, dtype=i32))[:, None, None]
 
         # ---- 1. arrivals -------------------------------------------------
         arrive = st.pipe[:, :, 0]
@@ -201,7 +265,6 @@ def make_step(B: int, Wout: int):
         # everywhere, i.e. V/2 VCs per class as in classic escape schemes.
         free_mask = st.pkt_src < 0                               # [B, V]
         ob_c0 = jnp.clip(st.out_buf, 0, B - 1)
-        classA = (jnp.arange(V) < V // 2)                        # [V]
         tgt_rx = ss.b_is_rx[ob_c0]                               # [B, V]
         allowed = jnp.where(tgt_rx[..., None], True,
                             jnp.where(st.phase2[..., None], ~classA, classA))
@@ -210,36 +273,57 @@ def make_step(B: int, Wout: int):
         first_free_c = jnp.argmax(free_ok, axis=-1).astype(i32)  # [B, V]
         need = active & (st.out_vc < 0) & ~st.out_is_ej & (occ > 0) \
             & has_free_c & (st.out_buf < B)
-        tb = jnp.where(need, st.out_buf, B)
-        score = jnp.where(need, (flat2d - rot) % NC, BIG)
-        segmin = jax.ops.segment_min(score.reshape(-1), tb.reshape(-1),
-                                     num_segments=B + 1)
-        win = need & (score == segmin[jnp.clip(tb, 0, B)]) & (score < BIG)
+        score = (flat2d - rot) % NC                              # unique/slot
+        code = jnp.where(need, score * NCp1 + flat2d, BIGC)
+        codef = code.reshape(-1)
+        obf0 = st.out_buf.reshape(-1)
 
-        # scatter claim into downstream (b_t, v_t); OOB indices are dropped
-        b_t = jnp.where(win, st.out_buf, B).reshape(-1)
-        v_t = first_free_c.reshape(-1)
-        nb = ss.b_dst[ob_c0]
-        d_oo, d_ob, d_owo, d_owl, d_oej = _route_fields(ss, nb, st.pkt_dst)
+        # winner (min code) per wired target buffer: contenders live at the
+        # buffers feeding the target's transmitting switch.  The gathered
+        # tensors go through optimization_barrier so XLA materializes them
+        # once instead of re-running the gather inside every fused consumer.
+        g_w = jax.lax.optimization_barrier((codef[idx_w], obf0[idx_w]))
+        m_w = cw_ok & (g_w[1] == tgt_ids)
+        win_code_w = jnp.where(m_w, g_w[0], BIGC).min(axis=(1, 2))
+        # winner per wireless rx target: contenders at sender WI switches
+        g_r = jax.lax.optimization_barrier((codef[idx_r], obf0[idx_r]))
+        m_r = cr_ok & (g_r[1] == rx_tgt)
+        win_code_r = jnp.where(m_r, g_r[0], BIGC).min(axis=(1, 2))
 
-        def claim(arr, val):
-            return arr.at[b_t, v_t].set(val.reshape(-1), mode="drop")
+        rx_slot = jnp.clip(b_ids - ss.rx0, 0, WMAX - 1)
+        win_code = jnp.where(ss.b_is_rx, win_code_r[rx_slot], win_code_w)
+        has_win = win_code < BIGC                                # [B]
+        wsrc = jnp.where(has_win, win_code % NCp1, 0)            # flat slot
+        # source side: my claim won iff my code is the target's winning code
+        win = need & (win_code[ob_c0] == code)
 
-        pkt_src = claim(st.pkt_src, st.pkt_src)
-        pkt_idx = claim(st.pkt_idx, st.pkt_idx)
-        pkt_dst = claim(st.pkt_dst, st.pkt_dst)
-        born = claim(st.born, st.born)
-        out_o = claim(st.out_o, d_oo.astype(i32))
-        out_buf = claim(st.out_buf, d_ob.astype(i32))
-        out_wo = claim(st.out_wo, d_owo.astype(i32))
-        out_is_wl = claim(st.out_is_wl, d_owl)
-        out_is_ej = claim(st.out_is_ej, d_oej)
-        out_vc = claim(st.out_vc, jnp.full((B, V), -1, i32))
-        phase2 = claim(st.phase2, st.phase2 | tgt_rx)
-        rcvd = claim(rcvd, jnp.zeros((B, V), i32))
-        sent = claim(st.sent, jnp.zeros((B, V), i32))
+        def g(a):            # winner's field per target buffer -> [B]
+            return a.reshape(-1)[wsrc]
+
+        vstar = g(first_free_c)                                  # [B]
+        claimed = has_win[:, None] & (vstar[:, None] == vcol)    # [B, V]
+        dst_w = g(st.pkt_dst)
+        d_oo, d_ob, d_owo, d_owl, d_oej = _route_fields(ss, ss.b_dst, dst_w)
+
+        def upd(old, val_b):
+            return jnp.where(claimed, val_b[:, None], old)
+
+        pkt_src = upd(st.pkt_src, g(st.pkt_src))
+        pkt_idx = upd(st.pkt_idx, g(st.pkt_idx))
+        pkt_dst = upd(st.pkt_dst, dst_w)
+        born = upd(st.born, g(st.born))
+        out_o = upd(st.out_o, d_oo.astype(i32))
+        out_buf = upd(st.out_buf, d_ob.astype(i32))
+        out_wo = upd(st.out_wo, d_owo.astype(i32))
+        out_is_wl = upd(st.out_is_wl, d_owl)
+        out_is_ej = upd(st.out_is_ej, d_oej)
+        out_vc = jnp.where(claimed, -1, st.out_vc)
+        phase2 = upd(st.phase2, g(st.phase2) | ss.b_is_rx)
+        rcvd = jnp.where(claimed, 0, rcvd)
+        sent = jnp.where(claimed, 0, st.sent)
+        src_of = upd(st.src_of, wsrc)
         # upstream learns its allocated VC
-        out_vc = jnp.where(win, v_t.reshape(B, V), out_vc)
+        out_vc = jnp.where(win, first_free_c, out_vc)
 
         active = pkt_src >= 0
         occ = jnp.where(active, rcvd - sent, 0)
@@ -261,35 +345,62 @@ def make_step(B: int, Wout: int):
         link_free |= out_is_wl & ~ss.wl_rx_busy
         elig = active & (occ > 0) & wl_ok \
             & (out_is_ej | ((out_vc >= 0) & (space > 0) & link_free))
+        code2 = jnp.where(elig, score * NCp1 + flat2d, BIGC)
+        code2f = code2.reshape(-1)
+        obf = out_buf.reshape(-1)
+
+        # wired-output winners: one flit per link per cycle
+        g2_w = jax.lax.optimization_barrier((code2f[idx_w], obf[idx_w]))
+        m2_w = cw_ok & (g2_w[1] == tgt_ids)
+        win2_w = jnp.where(m2_w, g2_w[0], BIGC).min(axis=(1, 2))
         # multi-channel ejection: memory stacks sink `b_ej_ways` flits/cycle
-        # (4-channel DRAM stacks, paper SIV); cores sink one
-        vcol = jnp.arange(V, dtype=i32)[None, :]
-        wo_base = jnp.where(out_is_ej,
-                            out_wo + (vcol % ss.b_ej_ways[:, None]) * ss.s_pad,
-                            out_wo)
-        wo = jnp.where(elig, wo_base, Wout)
-        score2 = jnp.where(elig, (flat2d - rot) % NC, BIG)
-        segmin2 = jax.ops.segment_min(score2.reshape(-1), wo.reshape(-1),
-                                      num_segments=Wout + 1)
-        fwd = elig & (score2 == segmin2[jnp.clip(wo, 0, Wout)]) & (score2 < BIG)
+        # (4-channel DRAM stacks, paper §IV); cores sink one.  A slot's
+        # ejection "way" is vc % ways; one winner per (switch, way).
+        ways_c = ss.b_ej_ways[csc][:, :, None]                   # [S, CS, 1]
+        way_s = varr[None, None, :] % ways_c                     # [S, CS, V]
+        g_s = jax.lax.optimization_barrier(
+            (code2f[idx_s], out_is_ej.reshape(-1)[idx_s]))
+        m_ej = cs_ok & g_s[1]
+        win2_ej = jnp.where(
+            m_ej[None] & (way_s[None] == jnp.arange(EJ_WAYS)[:, None, None, None]),
+            g_s[0][None], BIGC).min(axis=(2, 3))                 # [EJ, S]
+        # wireless rx sub-channels: receiver w serves `rxw` concurrent
+        # streams; a sender's stream is its WI id mod rxw
+        rxw = jnp.maximum(ss.rxw, 1)
+        g2_r = jax.lax.optimization_barrier((code2f[idx_r], obf[idx_r]))
+        m2_r = cr_ok & (g2_r[1] == rx_tgt)                       # [W, CR, V]
+        r_cand = (ss.b_wi[crc] % rxw)[:, :, None]                # [W, CR, 1]
+        win2_wl = jnp.where(
+            m2_r[None] & (r_cand[None] == jnp.arange(RXWMAX)[:, None, None, None]),
+            g2_r[0][None], BIGC).min(axis=(2, 3))                # [RXW, W]
+
+        way_mine = vcol % ss.b_ej_ways[:, None]                  # [B, V]
+        owo_s = jnp.clip(out_wo, 0, S - 1)                       # eject: switch
+        owo_w = jnp.clip(out_wo, 0, WMAX - 1)                    # wl: dst WI
+        r_mine = jnp.clip(ss.b_wi[:, None] % rxw, 0, RXWMAX - 1)
+        win2_mine = jnp.where(
+            out_is_ej, win2_ej[way_mine, owo_s],
+            jnp.where(out_is_wl, win2_wl[r_mine, owo_w], win2_w[ob_c]))
+        fwd = elig & (code2 == win2_mine)
 
         # wireless sender-side cap: one flit per transmitting WI per cycle
         # (and one WI total in single-channel mode); no-op for the crossbar
         # medium
-        is_wl_fwd = fwd & out_is_wl
-        capped = is_wl_fwd & ss.wl_sender_cap
-        snd = jnp.where(capped,
-                        jnp.where(ss.wl_single, 0, ss.b_wi[:, None]), WMAX)
-        segmin3 = jax.ops.segment_min(score2.reshape(-1), snd.reshape(-1),
-                                      num_segments=WMAX + 1)
-        keep = ~capped | (score2 == segmin3[jnp.clip(snd, 0, WMAX)])
-        fwd &= keep
+        capped = fwd & out_is_wl & ss.wl_sender_cap
+        cap_code = jnp.where(capped, code2, BIGC).reshape(-1)
+        cT_ok = cs_ok[jnp.clip(ss.wi_sw, 0, S - 1)]              # [W, CS, 1]
+        idx_t = idx_s[jnp.clip(ss.wi_sw, 0, S - 1)]              # [W, CS, V]
+        win3 = jnp.where(
+            cT_ok, jax.lax.optimization_barrier(cap_code[idx_t]),
+            BIGC).min(axis=(1, 2))
+        my3 = jnp.where(ss.wl_single, win3.min(),
+                        win3[jnp.clip(ss.b_wi, 0, WMAX - 1)][:, None])
+        fwd &= ~capped | (code2 == my3)
         is_wl_fwd = fwd & out_is_wl
 
         sent = sent + fwd.astype(i32)
         tail = fwd & (sent >= ss.pkt_len)
         ej = fwd & out_is_ej
-        nej = fwd & ~out_is_ej
 
         # ejection stats
         flits_del = st.flits_del + post * ej.sum().astype(i32)
@@ -300,40 +411,46 @@ def make_step(B: int, Wout: int):
             lat_ok, (t - born + 1).astype(jnp.float32), 0.0).sum()
         lat_pkts = st.lat_pkts + post * lat_ok.sum().astype(i32)
 
-        # non-eject: schedule arrival downstream, occupy link / rx / channel
+        # non-eject: deliver downstream via the src_of inverse map — each
+        # target (buffer, vc) gathers from the unique upstream slot feeding
+        # it (identity-checked against out_buf/out_vc to survive slot reuse)
         first_wl = is_wl_fwd & (sent == 1)   # header burst => control packet
         lat_t = jnp.where(out_is_wl, ss.lat_wl, ss.b_lat[ob_c]) \
             + jnp.where(first_wl & ~ss.wl_rx_busy, ss.ctrl_cycles, 0)
         serv_t = jnp.where(out_is_wl, ss.serv_wl, ss.b_serv[ob_c]) \
             + jnp.where(first_wl, ss.ctrl_cycles, 0)
-        nb_t = jnp.where(nej, out_buf, B).reshape(-1)
-        nv_t = ovc_c.reshape(-1)
-        nd_t = jnp.clip(lat_t - 1, 0, DMAX - 1).reshape(-1)
-        pipe = pipe.at[nb_t, nv_t, nd_t].add(1, mode="drop")
+
+        sv = jnp.clip(src_of, 0, NC - 1)
+        ident = (src_of >= 0) & (obf[sv] == b_ids[:, None]) \
+            & (out_vc.reshape(-1)[sv] == vcol)
+        incoming = ident & fwd.reshape(-1)[sv]                   # [B, V]
+        d_in = jnp.clip(lat_t.reshape(-1)[sv] - 1, 0, DMAX - 1)
+        pipe = pipe + (incoming[:, :, None]
+                       & (jnp.arange(DMAX) == d_in[:, :, None])).astype(i32)
         # crossbar: wireless winners do not serialize the receiver
-        bu_t = jnp.where(nej & (~out_is_wl | ss.wl_rx_busy), out_buf,
-                         B).reshape(-1)
-        busy_until = st.busy_until.at[bu_t].set(
-            (t + serv_t).reshape(-1), mode="drop")
+        ser_in = incoming & (~out_is_wl.reshape(-1)[sv] | ss.wl_rx_busy)
+        serv_in = serv_t.reshape(-1)[sv]
+        busy_until = jnp.where(
+            ser_in.any(axis=1),
+            t + jnp.where(ser_in, serv_in, 0).sum(axis=1), st.busy_until)
         wl_busy_until = jnp.where(
             is_wl_fwd.any(),
             t + (jnp.where(is_wl_fwd, serv_t, 0)).max(), st.wl_busy_until)
-        counts_into = st.counts_into.at[jnp.where(nej & (post > 0), out_buf,
-                                                  B).reshape(-1)].add(
-            1, mode="drop")
+        counts_into = st.counts_into + post * incoming.sum(axis=1).astype(i32)
         count_switch = st.count_switch + post * fwd.sum().astype(i32)
         ctrl_count = st.ctrl_count + post * first_wl.sum().astype(i32)
+        # the feeding packet's tail has been sent: the link is quiet again
+        src_of = jnp.where(ident & tail.reshape(-1)[sv], -1, src_of)
 
         # free VCs whose tail left
         pkt_src = jnp.where(tail, -1, pkt_src)
         out_vc = jnp.where(tail, -1, out_vc)
         out_is_wl = jnp.where(tail, False, out_is_wl)
         out_is_ej = jnp.where(tail, False, out_is_ej)
-        active = pkt_src >= 0
 
         # ---- 3. injection -------------------------------------------------
         N, K = ss.births.shape
-        n_ar = jnp.arange(N)
+        n_ar = jnp.arange(N, dtype=i32)
         qh = jnp.clip(st.q_head, 0, K - 1)
         birth_n = ss.births[n_ar, qh]
         ib = ss.inj_buf                                         # [N]
@@ -345,34 +462,43 @@ def make_step(B: int, Wout: int):
         r_oo, r_ob, r_owo, r_owl, r_oej = _route_fields(
             ss, ss.src_switch, dst_n)
 
-        ib_t = jnp.where(can_new, ib, B)
+        # target side: injection buffers map 1:1 to sources (static inj_src)
+        nb = jnp.clip(ss.inj_src, 0, N - 1)                     # [B]
+        n_valid = ss.inj_src >= 0
 
-        def iclaim(arr, val):
-            return arr.at[ib_t, ivc].set(val, mode="drop")
+        def gn(x):
+            return x[nb]                                        # [B]
 
-        pkt_src = iclaim(pkt_src, n_ar.astype(i32))
-        pkt_idx = iclaim(pkt_idx, st.q_head)
-        pkt_dst = iclaim(pkt_dst, dst_n)
-        born = iclaim(born, birth_n)
-        out_o = iclaim(out_o, r_oo.astype(i32))
-        out_buf = iclaim(out_buf, r_ob.astype(i32))
-        out_wo = iclaim(out_wo, r_owo.astype(i32))
-        out_is_wl = iclaim(out_is_wl, r_owl)
-        out_is_ej = iclaim(out_is_ej, r_oej)
-        out_vc = iclaim(out_vc, jnp.full((N,), -1, i32))
-        phase2 = iclaim(phase2, jnp.zeros((N,), bool))
-        rcvd = iclaim(rcvd, jnp.zeros((N,), i32))
-        sent = iclaim(sent, jnp.zeros((N,), i32))
+        icl = (n_valid & gn(can_new))[:, None] & (gn(ivc)[:, None] == vcol)
+
+        def iupd(old, val_n):
+            return jnp.where(icl, gn(val_n)[:, None], old)
+
+        pkt_src = jnp.where(icl, nb[:, None], pkt_src)
+        pkt_idx = iupd(pkt_idx, st.q_head)
+        pkt_dst = iupd(pkt_dst, dst_n)
+        born = iupd(born, birth_n)
+        out_o = iupd(out_o, r_oo.astype(i32))
+        out_buf = iupd(out_buf, r_ob.astype(i32))
+        out_wo = iupd(out_wo, r_owo.astype(i32))
+        out_is_wl = iupd(out_is_wl, r_owl)
+        out_is_ej = iupd(out_is_ej, r_oej)
+        out_vc = jnp.where(icl, -1, out_vc)
+        phase2 = jnp.where(icl, False, phase2)
+        rcvd = jnp.where(icl, 0, rcvd)
+        sent = jnp.where(icl, 0, sent)
+        src_of = jnp.where(icl, -1, src_of)
         inj_vc = jnp.where(can_new, ivc, st.inj_vc)
         inj_pushed = jnp.where(can_new, 0, st.inj_pushed)
         q_head = st.q_head + can_new.astype(i32)
 
-        # push one flit/cycle/core while there is space
+        # push one flit/cycle/core while there is space (cores write straight
+        # into their injection buffer — no pipe, so no src_of either)
         iv_c = jnp.clip(inj_vc, 0, V - 1)
         iocc = rcvd[ib, iv_c] - sent[ib, iv_c]
         can_push = (inj_vc >= 0) & (iocc < ss.b_depth[ib])
-        pb_t = jnp.where(can_push, ib, B)
-        rcvd = rcvd.at[pb_t, iv_c].add(1, mode="drop")
+        pushc = (n_valid & gn(can_push))[:, None] & (gn(iv_c)[:, None] == vcol)
+        rcvd = rcvd + pushc.astype(i32)
         inj_pushed = inj_pushed + can_push.astype(i32)
         flits_inj = st.flits_inj + post * can_push.sum().astype(i32)
         done = can_push & (inj_pushed >= ss.pkt_len)
@@ -392,7 +518,7 @@ def make_step(B: int, Wout: int):
             pkt_src=pkt_src, pkt_idx=pkt_idx, pkt_dst=pkt_dst, born=born,
             out_o=out_o, out_buf=out_buf, out_wo=out_wo, out_is_wl=out_is_wl,
             out_is_ej=out_is_ej, out_vc=out_vc, phase2=phase2,
-            rcvd=rcvd, sent=sent,
+            rcvd=rcvd, sent=sent, src_of=src_of,
             pipe=pipe, busy_until=busy_until, wl_busy_until=wl_busy_until,
             q_head=q_head, inj_vc=inj_vc, inj_pushed=inj_pushed,
             flits_inj=flits_inj, flits_del=flits_del, pkts_del=pkts_del,
@@ -404,16 +530,39 @@ def make_step(B: int, Wout: int):
     return step
 
 
-@functools.partial(jax.jit, static_argnums=(2, 3, 4))
-def _run(ss: SimStatic, st: SimState, cycles: int, B: int,
-         Wout: int) -> SimState:
-    step = make_step(B, Wout)
+def _scan_point(ss: SimStatic, st: SimState, cycles: int, B: int) -> SimState:
+    step = make_step(B)
 
     def body(carry, t):
         return step(ss, carry, t), None
 
     final, _ = jax.lax.scan(body, st, jnp.arange(cycles, dtype=jnp.int32))
     return final
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3))
+def _run_one(ss: SimStatic, st: SimState, cycles: int, B: int) -> SimState:
+    return _scan_point(ss, st, cycles, B)
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3))
+def _run_mapped(ss: SimStatic, st: SimState, cycles: int, B: int) -> SimState:
+    """Sequentially map the per-point scan over a stacked batch.
+
+    ``lax.map`` (not ``vmap``): each point's computation is the *identical*
+    program to the single-point path — bitwise-equal results — and on
+    XLA:CPU, where every batched op scales linearly anyway, a vmapped step
+    only adds lowering overhead.  The batch win comes from one dispatch for
+    the whole group and from sharding groups across devices (`_run_pmapped`).
+    """
+    return jax.lax.map(
+        lambda args: _scan_point(args[0], args[1], cycles, B), (ss, st))
+
+
+@functools.partial(jax.pmap, static_broadcasted_argnums=(2, 3))
+def _run_pmapped(ss: SimStatic, st: SimState, cycles: int, B: int) -> SimState:
+    return jax.lax.map(
+        lambda args: _scan_point(args[0], args[1], cycles, B), (ss, st))
 
 
 # --------------------------------------------------------------------------
@@ -424,7 +573,6 @@ def _run(ss: SimStatic, st: SimState, cycles: int, B: int,
 class PackedSim:
     ss: SimStatic
     B: int
-    Wout: int
     n_cores: int
     Lw: int
     n_inj: int
@@ -432,29 +580,75 @@ class PackedSim:
     rt: RoutingTables
     phy: PhyParams
     sim: SimParams
+    dims: dict = dataclasses.field(default_factory=dict)
+
+    def shape_key(self) -> tuple:
+        """Hashable signature of every padded array shape (batch grouping)."""
+        return tuple((k, np.shape(v)) for k, v in self.ss._asdict().items())
+
+
+def pack_dims(topo: Topology, tt: TrafficTable,
+              b_bucket: int = 64, s_bucket: int = 8, r_bucket: int = 64,
+              k_bucket: int = 32) -> dict:
+    """Natural (floor-less) padded dims of a point, without packing it.
+
+    Cheap (a few numpy reductions): lets ``sweep.run_sweep_batched`` compute
+    a group's harmonized floors first and then call ``pack`` exactly once
+    per point.  Must mirror the dim arithmetic in ``pack``.
+    """
+    Lw = topo.n_links
+    n_inj = tt.n_sources
+    n_wi = topo.n_wi
+    Wp = len(topo.wl_pairs)
+    # buffers into each switch: wired link dsts + injection dsts + rx dsts
+    b_dst_real = np.concatenate([
+        topo.link_dst.astype(np.int64),
+        tt.src_switch.astype(np.int64),
+        topo.wi_switch.astype(np.int64)])
+    indeg = np.bincount(b_dst_real, minlength=topo.n_switches)
+    cr_max = 0
+    if n_wi:
+        senders = [set() for _ in range(n_wi)]
+        for src_wi, dst_wi in topo.wl_pairs:
+            senders[int(dst_wi)].add(int(topo.wi_switch[int(src_wi)]))
+        # buffer lists are disjoint per switch, so candidate counts add up
+        cr_max = max((int(sum(indeg[s] for s in sw)) for sw in senders),
+                     default=0)
+    return {
+        "B": _bucket(Lw + n_inj + n_wi, b_bucket),
+        "S": _bucket(topo.n_switches + 1, s_bucket),
+        "R": _bucket(Lw + Wp + topo.n_switches, r_bucket),
+        "K": _bucket(tt.k, k_bucket),
+        "CS": _bucket(int(indeg.max(initial=1)), 4),
+        "CR": _bucket(max(cr_max, 1), 16),
+    }
 
 
 def pack(topo: Topology, rt: RoutingTables, tt: TrafficTable,
          phy: PhyParams, sim: SimParams,
          b_bucket: int = 64, s_bucket: int = 8, r_bucket: int = 64,
-         k_bucket: int = 32) -> PackedSim:
+         k_bucket: int = 32, floors: dict | None = None) -> PackedSim:
+    """Pack a (topology, routing, traffic) point into padded device arrays.
+
+    ``floors`` maps dim names (``B``, ``S``, ``R``, ``K``, ``CS``, ``CR``)
+    to minimum padded sizes, letting heterogeneous points be harmonized
+    onto one bucket shape so they can share an XLA compile *and* a batch
+    (see ``sweep.run_sweep_batched``).  Padding is semantically inert.
+    """
+    fl = floors or {}
     Lw = topo.n_links
     n_inj = tt.n_sources
     n_wi = topo.n_wi
-    B = _bucket(Lw + n_inj + n_wi, b_bucket)
-    S = _bucket(topo.n_switches + 1, s_bucket)
+    B = max(_bucket(Lw + n_inj + n_wi, b_bucket), fl.get("B", 0))
+    S = max(_bucket(topo.n_switches + 1, s_bucket), fl.get("S", 0))
     Wp = len(topo.wl_pairs)
-    R = _bucket(Lw + Wp + topo.n_switches, r_bucket)
+    R = max(_bucket(Lw + Wp + topo.n_switches, r_bucket), fl.get("R", 0))
     medium = phy.wireless_medium
-    # output arbitration slots: wired links + ejection (4 ways for memory
-    # stacks) + wireless slots (crossbar: one per WI pair; matching/single:
-    # one per receiver)
-    EJ_WAYS = 4
     RXW = max(1, int(phy.wireless_rx_streams)) if medium == "crossbar" else 1
-    n_wl_slots = WMAX * RXW
-    Wout = _bucket(Lw + EJ_WAYS * S + n_wl_slots, b_bucket)
+    assert RXW <= RXWMAX, \
+        f"wireless_rx_streams={RXW} exceeds simulator cap {RXWMAX}"
     N = n_inj
-    K = _bucket(tt.k, k_bucket)
+    K = max(_bucket(tt.k, k_bucket), fl.get("K", 0))
     assert n_wi <= WMAX
 
     # per-buffer attributes
@@ -466,6 +660,8 @@ def pack(topo: Topology, rt: RoutingTables, tt: TrafficTable,
     b_wi = np.full(B, -1, np.int32)
     b_is_rx = np.zeros(B, bool)
     b_ej_ways = np.ones(B, np.int32)
+    b_src_sw = np.full(B, S - 1, np.int32)
+    inj_src = np.full(B, -1, np.int32)
 
     cls = topo.link_cls
     pipe_stages = phy.switch_stages
@@ -478,6 +674,7 @@ def pack(topo: Topology, rt: RoutingTables, tt: TrafficTable,
     for l in range(Lw):
         c = int(cls[l])
         b_dst[l] = topo.link_dst[l]
+        b_src_sw[l] = topo.link_src[l]
         b_serv[l] = serv_map[c]
         b_lat[l] = pipe_stages + serv_map[c]
         mm = float(topo.link_mm[l])
@@ -492,6 +689,7 @@ def pack(topo: Topology, rt: RoutingTables, tt: TrafficTable,
     for n in range(n_inj):
         b = Lw + n
         b_dst[b] = tt.src_switch[n]
+        inj_src[b] = n
     rx0 = Lw + n_inj
     serv_wl = phy.wireless_flit_cycles
     for w in range(n_wi):
@@ -501,7 +699,7 @@ def pack(topo: Topology, rt: RoutingTables, tt: TrafficTable,
         b_epb[b] = phy.e_wireless_pj_bit
         b_is_rx[b] = True
     # sender WI of any buffer whose switch hosts a WI
-    for b in range(rx0):          # rx buffers themselves never send wireless
+    for b in range(rx0 + n_wi):   # rx buffers may relay (phase-2 hops)
         w = topo.wi_of_switch[b_dst[b]] if b_dst[b] < topo.n_switches else -1
         b_wi[b] = w
     # 4-channel memory stacks eject up to 4 flits/cycle
@@ -517,31 +715,53 @@ def pack(topo: Topology, rt: RoutingTables, tt: TrafficTable,
             if int(b_dst[b]) in wi_set:
                 b_depth[b] = max(int(b_depth[b]), phy.pkt_flits)
 
+    # arbitration candidate tables: buffers feeding each switch ...
+    in_bufs: list[list[int]] = [[] for _ in range(S)]
+    for b in range(rx0 + n_wi):
+        if b_dst[b] < topo.n_switches:
+            in_bufs[int(b_dst[b])].append(b)
+    CS = max(_bucket(max((len(x) for x in in_bufs), default=1), 4),
+             fl.get("CS", 0))
+    cands = np.full((S, CS), B, np.int32)
+    for s in range(topo.n_switches):
+        cands[s, :len(in_bufs[s])] = in_bufs[s]
+    # ... and buffers able to transmit to each wireless receiver
+    senders: list[list[int]] = [[] for _ in range(WMAX)]
+    for p in range(Wp):
+        src_wi = int(topo.wl_pairs[p, 0])
+        dst_wi = int(topo.wl_pairs[p, 1])
+        senders[dst_wi].append(int(topo.wi_switch[src_wi]))
+    cr_lists = [sorted({b for s in set(sw) for b in in_bufs[s]})
+                for sw in senders]
+    CR = max(_bucket(max((len(x) for x in cr_lists), default=1), 16),
+             fl.get("CR", 0))
+    candr = np.full((WMAX, CR), B, np.int32)
+    for w in range(n_wi):
+        candr[w, :len(cr_lists[w])] = cr_lists[w]
+    wi_sw = np.full(WMAX, S - 1, np.int32)
+    wi_sw[:n_wi] = topo.wi_switch
+
     # routing lookup tables
     next_out = np.full((S, S), 0, np.int32)
     next_out[:topo.n_switches, :topo.n_switches] = rt.next_out
     o_buf = np.full(R, B, np.int32)
-    o_wo = np.full(R, Wout, np.int32)
+    o_wo = np.full(R, 0, np.int32)
     o_is_wl = np.zeros(R, bool)
     o_is_ej = np.zeros(R, bool)
     for o in range(Lw):
         o_buf[o] = o
-        o_wo[o] = o
+        o_wo[o] = o               # wired arbitration key: the link itself
     for p in range(Wp):
         o = Lw + p
-        src_wi = int(topo.wl_pairs[p, 0])
         dst_wi = int(topo.wl_pairs[p, 1])
         o_buf[o] = rx0 + dst_wi
-        # rx sub-channel slot: each receiver serves RXW concurrent streams
-        slot = dst_wi * RXW + (src_wi % RXW)
-        o_wo[o] = Lw + EJ_WAYS * S + slot
+        o_wo[o] = dst_wi          # wireless arbitration key: the receiver
         o_is_wl[o] = True
     for s in range(topo.n_switches):
         o = Lw + Wp + s
-        o_wo[o] = Lw + s          # base slot; step adds (vc % ways) * S
+        o_wo[o] = s               # ejection arbitration key: the switch
         o_is_ej[o] = True
     assert rt.n_outputs == Lw + Wp + topo.n_switches
-    assert Lw + EJ_WAYS * S + n_wl_slots <= Wout + 1, (Lw, S, n_wl_slots, Wout)
 
     births = np.full((N, K), NO_PKT, np.int32)
     births[:, :tt.k] = tt.births
@@ -555,10 +775,13 @@ def pack(topo: Topology, rt: RoutingTables, tt: TrafficTable,
         b_lat=jnp.asarray(b_lat), b_epb=jnp.asarray(b_epb),
         b_depth=jnp.asarray(b_depth), b_wi=jnp.asarray(b_wi),
         b_is_rx=jnp.asarray(b_is_rx),
-        b_ej_ways=jnp.asarray(b_ej_ways), s_pad=jnp.int32(S),
+        b_ej_ways=jnp.asarray(b_ej_ways),
+        b_src_sw=jnp.asarray(b_src_sw), inj_src=jnp.asarray(inj_src),
         next_out=jnp.asarray(next_out),
         o_buf=jnp.asarray(o_buf), o_wo=jnp.asarray(o_wo),
         o_is_wl=jnp.asarray(o_is_wl), o_is_ej=jnp.asarray(o_is_ej),
+        cands=jnp.asarray(cands), candr=jnp.asarray(candr),
+        wi_sw=jnp.asarray(wi_sw), rxw=jnp.int32(RXW),
         n_wi=jnp.int32(n_wi), rx0=jnp.int32(rx0),
         inj_buf=jnp.asarray(Lw + np.arange(N, dtype=np.int32)),
         src_switch=jnp.asarray(tt.src_switch.astype(np.int32)),
@@ -573,12 +796,84 @@ def pack(topo: Topology, rt: RoutingTables, tt: TrafficTable,
         wl_rx_busy=jnp.asarray(medium != "crossbar"),
         sleepy=jnp.asarray(bool(sim.sleepy_rx)),
     )
-    return PackedSim(ss=ss, B=B, Wout=Wout, n_cores=topo.n_cores, Lw=Lw,
-                     n_inj=n_inj, topo=topo, rt=rt, phy=phy, sim=sim)
+    dims = {"B": B, "S": S, "R": R, "K": K, "CS": CS, "CR": CR}
+    return PackedSim(ss=ss, B=B, n_cores=topo.n_cores, Lw=Lw,
+                     n_inj=n_inj, topo=topo, rt=rt, phy=phy, sim=sim,
+                     dims=dims)
+
+
+# --------------------------------------------------------------------------
+# batched execution
+# --------------------------------------------------------------------------
+
+def _tree_stack(trees):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_state_batch(G: int, B: int, N: int) -> SimState:
+    st = init_state(B, N)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (G,) + x.shape), st)
+
+
+def run_batch(pss: Sequence[PackedSim], cycles: int | None = None,
+              devices: int | None = None) -> SimState:
+    """Run N same-bucket-shape points as one batched scan.
+
+    Returns a ``SimState`` whose leaves carry a leading batch axis, ordered
+    as ``pss``.  All points must share every padded array shape (use
+    ``pack(..., floors=...)`` to harmonize) and run for the same number of
+    cycles (warm-up may differ — it is a traced scalar).
+
+    When the host exposes several XLA devices (e.g.
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` on CPU), the
+    batch is sharded across them with ``pmap``; the remainder is padded by
+    repeating the last point and sliced off afterwards.  A batch of one
+    takes the plain single-point path, so ``run_batch([ps]) == run(ps)``
+    bitwise.
+    """
+    if not pss:
+        raise ValueError("run_batch needs at least one point")
+    key0 = pss[0].shape_key()
+    for ps in pss[1:]:
+        if ps.shape_key() != key0:
+            raise ValueError(
+                "run_batch requires identical padded shapes; got "
+                f"{ps.dims} vs {pss[0].dims} — pack with harmonized floors")
+    cycles = cycles or pss[0].sim.cycles
+    B = pss[0].B
+    N = int(pss[0].ss.births.shape[0])
+    G = len(pss)
+    if G == 1:
+        out = _run_one(pss[0].ss, init_state(B, N), cycles, B)
+        out = jax.tree_util.tree_map(lambda x: x[None], out)
+        return jax.block_until_ready(out)
+    ss = _tree_stack([ps.ss for ps in pss])
+    st = init_state_batch(G, B, N)
+    D = devices if devices is not None else jax.local_device_count()
+    D = min(D, G)
+    if D > 1:
+        Gp = int(np.ceil(G / D) * D)
+        if Gp != G:
+            pad = jax.tree_util.tree_map(
+                lambda x: jnp.repeat(x[-1:], Gp - G, axis=0), ss)
+            ss = jax.tree_util.tree_map(
+                lambda a, b: jnp.concatenate([a, b]), ss, pad)
+            st = init_state_batch(Gp, B, N)
+        shard = jax.tree_util.tree_map(
+            lambda x: x.reshape((D, Gp // D) + x.shape[1:]), ss)
+        st_sh = jax.tree_util.tree_map(
+            lambda x: x.reshape((D, Gp // D) + x.shape[1:]), st)
+        out = _run_pmapped(shard, st_sh, cycles, B)
+        out = jax.tree_util.tree_map(
+            lambda x: x.reshape((Gp,) + x.shape[2:])[:G], out)
+    else:
+        out = _run_mapped(ss, st, cycles, B)
+    return jax.block_until_ready(out)
 
 
 def run(ps: PackedSim, cycles: int | None = None) -> SimState:
+    """Single-point API (a batch of one; same step program as batches)."""
     cycles = cycles or ps.sim.cycles
-    st = init_state(ps.B, ps.ss.births.shape[0])
-    return jax.block_until_ready(
-        _run(ps.ss, st, cycles, ps.B, ps.Wout))
+    st = init_state(ps.B, int(ps.ss.births.shape[0]))
+    return jax.block_until_ready(_run_one(ps.ss, st, cycles, ps.B))

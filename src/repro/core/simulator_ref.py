@@ -1,0 +1,597 @@
+"""Reference scatter/segment implementation of the flit simulator.
+
+This is the original engine, kept verbatim as a *differential-testing
+oracle* for ``simulator.py``'s scatter-free rewrite: both engines must
+produce bitwise-identical dynamics (tests/test_engine_equivalence.py
+asserts this across fabrics, media, MAC modes and system sizes).  It is
+also the baseline that ``benchmarks.simspeed`` reports speedups against.
+It is NOT used by the sweep/benchmark paths — do not extend it; extend
+``simulator.py`` and keep this file frozen unless the simulated semantics
+themselves change.
+
+Original module docstring follows.
+
+Cycle-accurate flit-level simulator for multichip NoCs (paper §IV).
+
+Implements wormhole switching with virtual channels (8 VCs x 16-flit input
+buffers), credit-equivalent backpressure, forwarding-table routing, the
+paper's control-packet wireless MAC with partial packet transmission
+(§III.D), and sleepy receivers [17] — all as one vectorized cycle step
+scanned over time with ``jax.lax.scan``.
+
+Data model
+----------
+Everything is link-centric.  A *buffer* is the input buffer at the
+downstream end of a directed link.  Buffers come in three groups:
+
+    [0, Lw)               wired links  (buffer id == routing link id)
+    [Lw, Lw+Ninj)         injection links (core -> its switch)
+    [Lw+Ninj, ...+n_wi)   wireless rx buffers (one per WI; all senders share)
+
+Per (buffer, vc) state carries the *current packet*: identity, destination,
+routing decision (made once, at VC-claim time = header), a claimed output VC,
+and received/sent flit counters; occupancy is ``rcvd - sent``.  Flits in
+flight on a link live in a short arrival pipe (shift register) that models
+the 3-stage switch pipeline + wire/serializer latency.
+
+Wireless medium (DESIGN.md §7): the control-packet MAC is modeled as
+output arbitration over the air, a control packet preceding every packet's
+burst (and keeping non-addressed receivers asleep [17]).  Concurrency is
+selected by ``PhyParams.wireless_medium``:
+
+  crossbar  every WI pair is an independent virtual channel (idealized
+            multi-channel medium; required for the paper's reported
+            bandwidth/latency results; default),
+  matching  one stream per receiver plus one flit/cycle per sender,
+  single    the strict shared 16 Gbps channel of §III.B (one flit in the
+            air per ``serv_wl`` cycles) — physics-faithful ablation.
+
+TOKEN mode additionally requires a whole buffered packet before
+transmission [7] (and therefore packet-deep WI buffers).
+
+Simplifications (documented in DESIGN.md): instant credit return; one VC
+allocation per target buffer per cycle; time-rotating (round-robin
+equivalent) arbitration priority; an input link's VCs may forward to
+distinct outputs in the same cycle.
+
+Compile sharing: every topology-dependent quantity is a *padded, traced
+array argument*, so one XLA compilation serves all topologies, fabrics and
+traffic tables of the same bucket shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.constants import LinkClass, MacMode, PhyParams, SimParams
+from repro.core.routing import RoutingTables
+from repro.core.topology import Topology
+from repro.core.traffic import NO_PKT, TrafficTable
+
+V = 8            # virtual channels per port (paper §IV)
+DEPTH = 16       # buffer depth in flits (paper §IV)
+DMAX = 12        # arrival-pipe depth >= max link latency
+WMAX = 16        # max wireless interfaces
+
+
+def _bucket(n: int, q: int) -> int:
+    return int(np.ceil(max(n, 1) / q) * q)
+
+
+class SimStatic(NamedTuple):
+    """Padded, device-resident topology/routing/traffic description."""
+
+    # buffers
+    b_dst: jnp.ndarray        # [B] dst switch (dummy rows -> S_pad-1)
+    b_serv: jnp.ndarray      # [B] cycles between flits INTO this buffer
+    b_lat: jnp.ndarray       # [B] forward -> arrival latency (>=1)
+    b_epb: jnp.ndarray       # [B] pJ/bit of the link feeding this buffer
+    b_depth: jnp.ndarray     # [B] buffer depth in flits
+    b_wi: jnp.ndarray        # [B] WI id at the buffer's switch (-1 none)
+    b_is_rx: jnp.ndarray     # [B] bool: wireless rx buffer
+    b_ej_ways: jnp.ndarray   # [B] parallel ejection channels at dst switch
+    s_pad: jnp.ndarray       # scalar: padded switch count (eject slot stride)
+    # routing
+    next_out: jnp.ndarray    # [S, S] routing output id
+    o_buf: jnp.ndarray       # [R] target buffer id (dummy B for eject/pad)
+    o_wo: jnp.ndarray        # [R] output arbitration slot (Wout = drop)
+    o_is_wl: jnp.ndarray     # [R] bool wireless pair link
+    o_is_ej: jnp.ndarray     # [R] bool ejection
+    # wireless
+    n_wi: jnp.ndarray        # scalar int32
+    rx0: jnp.ndarray         # scalar int32: first rx buffer id
+    # injection + traffic
+    inj_buf: jnp.ndarray     # [N] injection buffer id per source
+    src_switch: jnp.ndarray  # [N] switch of each source
+    births: jnp.ndarray      # [N, K]
+    dests: jnp.ndarray       # [N, K]
+    # scalars (traced => shared compile)
+    pkt_len: jnp.ndarray     # int32
+    warmup: jnp.ndarray      # int32
+    serv_wl: jnp.ndarray     # int32 rx service cycles per flit
+    lat_wl: jnp.ndarray      # int32
+    ctrl_cycles: jnp.ndarray  # int32 control-packet duration
+    mac_token: jnp.ndarray   # bool: whole-packet token MAC [7]
+    wl_sender_cap: jnp.ndarray  # bool: one flit/cycle per transmitting WI
+    wl_single: jnp.ndarray   # bool: strict single shared channel
+    wl_rx_busy: jnp.ndarray  # bool: serialize each receiver (non-crossbar)
+    sleepy: jnp.ndarray      # bool
+
+
+class SimState(NamedTuple):
+    # per (buffer, vc)
+    pkt_src: jnp.ndarray      # [B, V] int32, -1 = free
+    pkt_idx: jnp.ndarray      # [B, V]
+    pkt_dst: jnp.ndarray      # [B, V]
+    born: jnp.ndarray         # [B, V]
+    out_o: jnp.ndarray        # [B, V] routing output id
+    out_buf: jnp.ndarray      # [B, V]
+    out_wo: jnp.ndarray       # [B, V]
+    out_is_wl: jnp.ndarray    # [B, V] bool
+    out_is_ej: jnp.ndarray    # [B, V] bool
+    out_vc: jnp.ndarray       # [B, V] int32, -1 = unallocated
+    phase2: jnp.ndarray       # [B, V] bool: packet already crossed wireless
+    rcvd: jnp.ndarray         # [B, V]
+    sent: jnp.ndarray         # [B, V]
+    pipe: jnp.ndarray         # [B, V, DMAX]
+    busy_until: jnp.ndarray   # [B]
+    wl_busy_until: jnp.ndarray  # scalar: shared-channel mode
+    # injection
+    q_head: jnp.ndarray       # [N]
+    inj_vc: jnp.ndarray       # [N]
+    inj_pushed: jnp.ndarray   # [N]
+    # stats (post-warmup)
+    flits_inj: jnp.ndarray
+    flits_del: jnp.ndarray
+    pkts_del: jnp.ndarray
+    lat_sum: jnp.ndarray      # float32
+    lat_pkts: jnp.ndarray
+    counts_into: jnp.ndarray  # [B] link-traversal events
+    count_switch: jnp.ndarray
+    ctrl_count: jnp.ndarray
+    awake_cycles: jnp.ndarray
+    sleep_cycles: jnp.ndarray
+
+
+def init_state(B: int, N: int) -> SimState:
+    i32 = jnp.int32
+    zBV = jnp.zeros((B, V), i32)
+    return SimState(
+        pkt_src=jnp.full((B, V), -1, i32), pkt_idx=zBV, pkt_dst=zBV, born=zBV,
+        out_o=zBV, out_buf=zBV, out_wo=zBV,
+        out_is_wl=jnp.zeros((B, V), bool), out_is_ej=jnp.zeros((B, V), bool),
+        out_vc=jnp.full((B, V), -1, i32),
+        phase2=jnp.zeros((B, V), bool), rcvd=zBV, sent=zBV,
+        pipe=jnp.zeros((B, V, DMAX), i32), busy_until=jnp.zeros((B,), i32),
+        wl_busy_until=jnp.int32(0),
+        q_head=jnp.zeros((N,), i32), inj_vc=jnp.full((N,), -1, i32),
+        inj_pushed=jnp.zeros((N,), i32),
+        flits_inj=jnp.int32(0), flits_del=jnp.int32(0), pkts_del=jnp.int32(0),
+        lat_sum=jnp.float32(0), lat_pkts=jnp.int32(0),
+        counts_into=jnp.zeros((B,), i32), count_switch=jnp.int32(0),
+        ctrl_count=jnp.int32(0), awake_cycles=jnp.int32(0),
+        sleep_cycles=jnp.int32(0),
+    )
+
+
+def _route_fields(ss: SimStatic, at_switch: jnp.ndarray, dst: jnp.ndarray):
+    """Gather routing decision for packets at `at_switch` going to `dst`."""
+    oo = ss.next_out[at_switch, dst]
+    return oo, ss.o_buf[oo], ss.o_wo[oo], ss.o_is_wl[oo], ss.o_is_ej[oo]
+
+
+def make_step(B: int, Wout: int):
+    """Build the per-cycle transition function (shapes baked in)."""
+    NC = B * V
+    BIG = jnp.int32(4 * NC)
+    flat2d = jnp.arange(NC, dtype=jnp.int32).reshape(B, V)
+
+    def step(ss: SimStatic, st: SimState, t: jnp.ndarray) -> SimState:
+        i32 = jnp.int32
+        t = t.astype(i32)
+        post = (t >= ss.warmup).astype(i32)
+        rot = t % NC
+
+        # ---- 1. arrivals -------------------------------------------------
+        arrive = st.pipe[:, :, 0]
+        rcvd = st.rcvd + arrive
+        pipe = jnp.concatenate(
+            [st.pipe[:, :, 1:], jnp.zeros((B, V, 1), i32)], axis=2)
+
+        active = st.pkt_src >= 0
+        occ = jnp.where(active, rcvd - st.sent, 0)
+
+        # ---- 2a. output-VC claims ---------------------------------------
+        # one new downstream-VC allocation per target buffer per cycle.
+        # VC classes break wormhole cycles (see module docstring): packets
+        # before their wireless hop claim VCs [0, V/2), after it [V/2, V);
+        # rx buffers admit any VC; pure-wired fabrics see phase2=False
+        # everywhere, i.e. V/2 VCs per class as in classic escape schemes.
+        free_mask = st.pkt_src < 0                               # [B, V]
+        ob_c0 = jnp.clip(st.out_buf, 0, B - 1)
+        classA = (jnp.arange(V) < V // 2)                        # [V]
+        tgt_rx = ss.b_is_rx[ob_c0]                               # [B, V]
+        allowed = jnp.where(tgt_rx[..., None], True,
+                            jnp.where(st.phase2[..., None], ~classA, classA))
+        free_ok = free_mask[ob_c0] & allowed                     # [B, V, V]
+        has_free_c = free_ok.any(axis=-1)
+        first_free_c = jnp.argmax(free_ok, axis=-1).astype(i32)  # [B, V]
+        need = active & (st.out_vc < 0) & ~st.out_is_ej & (occ > 0) \
+            & has_free_c & (st.out_buf < B)
+        tb = jnp.where(need, st.out_buf, B)
+        score = jnp.where(need, (flat2d - rot) % NC, BIG)
+        segmin = jax.ops.segment_min(score.reshape(-1), tb.reshape(-1),
+                                     num_segments=B + 1)
+        win = need & (score == segmin[jnp.clip(tb, 0, B)]) & (score < BIG)
+
+        # scatter claim into downstream (b_t, v_t); OOB indices are dropped
+        b_t = jnp.where(win, st.out_buf, B).reshape(-1)
+        v_t = first_free_c.reshape(-1)
+        nb = ss.b_dst[ob_c0]
+        d_oo, d_ob, d_owo, d_owl, d_oej = _route_fields(ss, nb, st.pkt_dst)
+
+        def claim(arr, val):
+            return arr.at[b_t, v_t].set(val.reshape(-1), mode="drop")
+
+        pkt_src = claim(st.pkt_src, st.pkt_src)
+        pkt_idx = claim(st.pkt_idx, st.pkt_idx)
+        pkt_dst = claim(st.pkt_dst, st.pkt_dst)
+        born = claim(st.born, st.born)
+        out_o = claim(st.out_o, d_oo.astype(i32))
+        out_buf = claim(st.out_buf, d_ob.astype(i32))
+        out_wo = claim(st.out_wo, d_owo.astype(i32))
+        out_is_wl = claim(st.out_is_wl, d_owl)
+        out_is_ej = claim(st.out_is_ej, d_oej)
+        out_vc = claim(st.out_vc, jnp.full((B, V), -1, i32))
+        phase2 = claim(st.phase2, st.phase2 | tgt_rx)
+        rcvd = claim(rcvd, jnp.zeros((B, V), i32))
+        sent = claim(st.sent, jnp.zeros((B, V), i32))
+        # upstream learns its allocated VC
+        out_vc = jnp.where(win, v_t.reshape(B, V), out_vc)
+
+        active = pkt_src >= 0
+        occ = jnp.where(active, rcvd - sent, 0)
+
+        # ---- 2b. forwarding: wired links, ejection, wireless -------------
+        inflight = pipe.sum(axis=2)                              # [B, V]
+        ob_c = jnp.clip(out_buf, 0, B - 1)
+        ovc_c = jnp.clip(out_vc, 0, V - 1)
+        occ_down = rcvd[ob_c, ovc_c] - sent[ob_c, ovc_c]
+        space = ss.b_depth[ob_c] - occ_down - inflight[ob_c, ovc_c]
+        link_free = jnp.take(st.busy_until, ob_c) <= t
+        # token MAC: wireless transmission only once the whole packet is here
+        whole = rcvd >= ss.pkt_len
+        wl_ok = ~out_is_wl | ~ss.mac_token | whole
+        # single-channel mode: nothing flies while the channel is busy
+        wl_ch_free = ~ss.wl_single | (st.wl_busy_until <= t)
+        wl_ok &= ~out_is_wl | wl_ch_free
+        # crossbar medium: receivers are not serialized
+        link_free |= out_is_wl & ~ss.wl_rx_busy
+        elig = active & (occ > 0) & wl_ok \
+            & (out_is_ej | ((out_vc >= 0) & (space > 0) & link_free))
+        # multi-channel ejection: memory stacks sink `b_ej_ways` flits/cycle
+        # (4-channel DRAM stacks, paper SIV); cores sink one
+        vcol = jnp.arange(V, dtype=i32)[None, :]
+        wo_base = jnp.where(out_is_ej,
+                            out_wo + (vcol % ss.b_ej_ways[:, None]) * ss.s_pad,
+                            out_wo)
+        wo = jnp.where(elig, wo_base, Wout)
+        score2 = jnp.where(elig, (flat2d - rot) % NC, BIG)
+        segmin2 = jax.ops.segment_min(score2.reshape(-1), wo.reshape(-1),
+                                      num_segments=Wout + 1)
+        fwd = elig & (score2 == segmin2[jnp.clip(wo, 0, Wout)]) & (score2 < BIG)
+
+        # wireless sender-side cap: one flit per transmitting WI per cycle
+        # (and one WI total in single-channel mode); no-op for the crossbar
+        # medium
+        is_wl_fwd = fwd & out_is_wl
+        capped = is_wl_fwd & ss.wl_sender_cap
+        snd = jnp.where(capped,
+                        jnp.where(ss.wl_single, 0, ss.b_wi[:, None]), WMAX)
+        segmin3 = jax.ops.segment_min(score2.reshape(-1), snd.reshape(-1),
+                                      num_segments=WMAX + 1)
+        keep = ~capped | (score2 == segmin3[jnp.clip(snd, 0, WMAX)])
+        fwd &= keep
+        is_wl_fwd = fwd & out_is_wl
+
+        sent = sent + fwd.astype(i32)
+        tail = fwd & (sent >= ss.pkt_len)
+        ej = fwd & out_is_ej
+        nej = fwd & ~out_is_ej
+
+        # ejection stats
+        flits_del = st.flits_del + post * ej.sum().astype(i32)
+        tail_ej = tail & out_is_ej
+        lat_ok = tail_ej & (born >= ss.warmup)
+        pkts_del = st.pkts_del + post * tail_ej.sum().astype(i32)
+        lat_sum = st.lat_sum + post * jnp.where(
+            lat_ok, (t - born + 1).astype(jnp.float32), 0.0).sum()
+        lat_pkts = st.lat_pkts + post * lat_ok.sum().astype(i32)
+
+        # non-eject: schedule arrival downstream, occupy link / rx / channel
+        first_wl = is_wl_fwd & (sent == 1)   # header burst => control packet
+        lat_t = jnp.where(out_is_wl, ss.lat_wl, ss.b_lat[ob_c]) \
+            + jnp.where(first_wl & ~ss.wl_rx_busy, ss.ctrl_cycles, 0)
+        serv_t = jnp.where(out_is_wl, ss.serv_wl, ss.b_serv[ob_c]) \
+            + jnp.where(first_wl, ss.ctrl_cycles, 0)
+        nb_t = jnp.where(nej, out_buf, B).reshape(-1)
+        nv_t = ovc_c.reshape(-1)
+        nd_t = jnp.clip(lat_t - 1, 0, DMAX - 1).reshape(-1)
+        pipe = pipe.at[nb_t, nv_t, nd_t].add(1, mode="drop")
+        # crossbar: wireless winners do not serialize the receiver
+        bu_t = jnp.where(nej & (~out_is_wl | ss.wl_rx_busy), out_buf,
+                         B).reshape(-1)
+        busy_until = st.busy_until.at[bu_t].set(
+            (t + serv_t).reshape(-1), mode="drop")
+        wl_busy_until = jnp.where(
+            is_wl_fwd.any(),
+            t + (jnp.where(is_wl_fwd, serv_t, 0)).max(), st.wl_busy_until)
+        counts_into = st.counts_into.at[jnp.where(nej & (post > 0), out_buf,
+                                                  B).reshape(-1)].add(
+            1, mode="drop")
+        count_switch = st.count_switch + post * fwd.sum().astype(i32)
+        ctrl_count = st.ctrl_count + post * first_wl.sum().astype(i32)
+
+        # free VCs whose tail left
+        pkt_src = jnp.where(tail, -1, pkt_src)
+        out_vc = jnp.where(tail, -1, out_vc)
+        out_is_wl = jnp.where(tail, False, out_is_wl)
+        out_is_ej = jnp.where(tail, False, out_is_ej)
+        active = pkt_src >= 0
+
+        # ---- 3. injection -------------------------------------------------
+        N, K = ss.births.shape
+        n_ar = jnp.arange(N)
+        qh = jnp.clip(st.q_head, 0, K - 1)
+        birth_n = ss.births[n_ar, qh]
+        ib = ss.inj_buf                                         # [N]
+        ifree = (pkt_src[ib] < 0) & classA[None, :]             # [N, V]
+        ihas = ifree.any(axis=1)
+        ivc = jnp.argmax(ifree, axis=1).astype(i32)
+        can_new = (st.inj_vc < 0) & (st.q_head < K) & (birth_n <= t) & ihas
+        dst_n = ss.dests[n_ar, qh]
+        r_oo, r_ob, r_owo, r_owl, r_oej = _route_fields(
+            ss, ss.src_switch, dst_n)
+
+        ib_t = jnp.where(can_new, ib, B)
+
+        def iclaim(arr, val):
+            return arr.at[ib_t, ivc].set(val, mode="drop")
+
+        pkt_src = iclaim(pkt_src, n_ar.astype(i32))
+        pkt_idx = iclaim(pkt_idx, st.q_head)
+        pkt_dst = iclaim(pkt_dst, dst_n)
+        born = iclaim(born, birth_n)
+        out_o = iclaim(out_o, r_oo.astype(i32))
+        out_buf = iclaim(out_buf, r_ob.astype(i32))
+        out_wo = iclaim(out_wo, r_owo.astype(i32))
+        out_is_wl = iclaim(out_is_wl, r_owl)
+        out_is_ej = iclaim(out_is_ej, r_oej)
+        out_vc = iclaim(out_vc, jnp.full((N,), -1, i32))
+        phase2 = iclaim(phase2, jnp.zeros((N,), bool))
+        rcvd = iclaim(rcvd, jnp.zeros((N,), i32))
+        sent = iclaim(sent, jnp.zeros((N,), i32))
+        inj_vc = jnp.where(can_new, ivc, st.inj_vc)
+        inj_pushed = jnp.where(can_new, 0, st.inj_pushed)
+        q_head = st.q_head + can_new.astype(i32)
+
+        # push one flit/cycle/core while there is space
+        iv_c = jnp.clip(inj_vc, 0, V - 1)
+        iocc = rcvd[ib, iv_c] - sent[ib, iv_c]
+        can_push = (inj_vc >= 0) & (iocc < ss.b_depth[ib])
+        pb_t = jnp.where(can_push, ib, B)
+        rcvd = rcvd.at[pb_t, iv_c].add(1, mode="drop")
+        inj_pushed = inj_pushed + can_push.astype(i32)
+        flits_inj = st.flits_inj + post * can_push.sum().astype(i32)
+        done = can_push & (inj_pushed >= ss.pkt_len)
+        inj_vc = jnp.where(done, -1, inj_vc)
+
+        # ---- 4. receiver wake/sleep accounting ([17]) ---------------------
+        rx_ids = ss.rx0 + jnp.arange(WMAX, dtype=i32)
+        rx_got = jnp.take(arrive.sum(axis=1), jnp.clip(rx_ids, 0, B - 1)) > 0
+        rx_busy = jnp.take(busy_until, jnp.clip(rx_ids, 0, B - 1)) > t
+        rx_active = (rx_got | rx_busy) & (jnp.arange(WMAX) < ss.n_wi)
+        n_rx_on = rx_active.sum().astype(i32)
+        awake = jnp.where(ss.sleepy, n_rx_on, ss.n_wi)
+        awake_cycles = st.awake_cycles + post * awake
+        sleep_cycles = st.sleep_cycles + post * (ss.n_wi - awake)
+
+        return SimState(
+            pkt_src=pkt_src, pkt_idx=pkt_idx, pkt_dst=pkt_dst, born=born,
+            out_o=out_o, out_buf=out_buf, out_wo=out_wo, out_is_wl=out_is_wl,
+            out_is_ej=out_is_ej, out_vc=out_vc, phase2=phase2,
+            rcvd=rcvd, sent=sent,
+            pipe=pipe, busy_until=busy_until, wl_busy_until=wl_busy_until,
+            q_head=q_head, inj_vc=inj_vc, inj_pushed=inj_pushed,
+            flits_inj=flits_inj, flits_del=flits_del, pkts_del=pkts_del,
+            lat_sum=lat_sum, lat_pkts=lat_pkts, counts_into=counts_into,
+            count_switch=count_switch, ctrl_count=ctrl_count,
+            awake_cycles=awake_cycles, sleep_cycles=sleep_cycles,
+        )
+
+    return step
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3, 4))
+def _run(ss: SimStatic, st: SimState, cycles: int, B: int,
+         Wout: int) -> SimState:
+    step = make_step(B, Wout)
+
+    def body(carry, t):
+        return step(ss, carry, t), None
+
+    final, _ = jax.lax.scan(body, st, jnp.arange(cycles, dtype=jnp.int32))
+    return final
+
+
+# --------------------------------------------------------------------------
+# host-side packing
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PackedSim:
+    ss: SimStatic
+    B: int
+    Wout: int
+    n_cores: int
+    Lw: int
+    n_inj: int
+    topo: Topology
+    rt: RoutingTables
+    phy: PhyParams
+    sim: SimParams
+
+
+def pack(topo: Topology, rt: RoutingTables, tt: TrafficTable,
+         phy: PhyParams, sim: SimParams,
+         b_bucket: int = 64, s_bucket: int = 8, r_bucket: int = 64,
+         k_bucket: int = 32) -> PackedSim:
+    Lw = topo.n_links
+    n_inj = tt.n_sources
+    n_wi = topo.n_wi
+    B = _bucket(Lw + n_inj + n_wi, b_bucket)
+    S = _bucket(topo.n_switches + 1, s_bucket)
+    Wp = len(topo.wl_pairs)
+    R = _bucket(Lw + Wp + topo.n_switches, r_bucket)
+    medium = phy.wireless_medium
+    # output arbitration slots: wired links + ejection (4 ways for memory
+    # stacks) + wireless slots (crossbar: one per WI pair; matching/single:
+    # one per receiver)
+    EJ_WAYS = 4
+    RXW = max(1, int(phy.wireless_rx_streams)) if medium == "crossbar" else 1
+    n_wl_slots = WMAX * RXW
+    Wout = _bucket(Lw + EJ_WAYS * S + n_wl_slots, b_bucket)
+    N = n_inj
+    K = _bucket(tt.k, k_bucket)
+    assert n_wi <= WMAX
+
+    # per-buffer attributes
+    b_dst = np.full(B, S - 1, np.int32)
+    b_serv = np.ones(B, np.int32)
+    b_lat = np.ones(B, np.int32)
+    b_epb = np.zeros(B, np.float32)
+    b_depth = np.full(B, DEPTH, np.int32)
+    b_wi = np.full(B, -1, np.int32)
+    b_is_rx = np.zeros(B, bool)
+    b_ej_ways = np.ones(B, np.int32)
+
+    cls = topo.link_cls
+    pipe_stages = phy.switch_stages
+    serv_map = {
+        int(LinkClass.MESH): 1,
+        int(LinkClass.INTERPOSER): phy.interposer_flit_cycles,
+        int(LinkClass.SERIAL): phy.serial_flit_cycles,
+        int(LinkClass.WIDEIO): phy.wideio_flit_cycles,
+    }
+    for l in range(Lw):
+        c = int(cls[l])
+        b_dst[l] = topo.link_dst[l]
+        b_serv[l] = serv_map[c]
+        b_lat[l] = pipe_stages + serv_map[c]
+        mm = float(topo.link_mm[l])
+        if c == int(LinkClass.MESH):
+            b_epb[l] = phy.e_wire_pj_bit_mm * mm
+        elif c == int(LinkClass.INTERPOSER):
+            b_epb[l] = phy.e_wire_pj_bit_mm * mm + phy.e_ubump_pj_bit
+        elif c == int(LinkClass.SERIAL):
+            b_epb[l] = phy.e_serial_pj_bit
+        elif c == int(LinkClass.WIDEIO):
+            b_epb[l] = phy.e_wideio_pj_bit
+    for n in range(n_inj):
+        b = Lw + n
+        b_dst[b] = tt.src_switch[n]
+    rx0 = Lw + n_inj
+    serv_wl = phy.wireless_flit_cycles
+    for w in range(n_wi):
+        b = rx0 + w
+        b_dst[b] = topo.wi_switch[w]
+        b_lat[b] = pipe_stages + serv_wl
+        b_epb[b] = phy.e_wireless_pj_bit
+        b_is_rx[b] = True
+    # sender WI of any buffer whose switch hosts a WI
+    for b in range(rx0):          # rx buffers themselves never send wireless
+        w = topo.wi_of_switch[b_dst[b]] if b_dst[b] < topo.n_switches else -1
+        b_wi[b] = w
+    # 4-channel memory stacks eject up to 4 flits/cycle
+    for b in range(B):
+        if b_dst[b] < topo.n_switches and topo.is_mem[b_dst[b]]:
+            b_ej_ways[b] = EJ_WAYS
+    if sim.mac == MacMode.TOKEN and n_wi:
+        # token MAC [7] transmits whole packets only => WI-adjacent buffers
+        # must hold a full packet (the buffer overhead the paper's
+        # control-packet MAC removes, §III.D)
+        wi_set = set(int(x) for x in topo.wi_switch)
+        for b in range(rx0):
+            if int(b_dst[b]) in wi_set:
+                b_depth[b] = max(int(b_depth[b]), phy.pkt_flits)
+
+    # routing lookup tables
+    next_out = np.full((S, S), 0, np.int32)
+    next_out[:topo.n_switches, :topo.n_switches] = rt.next_out
+    o_buf = np.full(R, B, np.int32)
+    o_wo = np.full(R, Wout, np.int32)
+    o_is_wl = np.zeros(R, bool)
+    o_is_ej = np.zeros(R, bool)
+    for o in range(Lw):
+        o_buf[o] = o
+        o_wo[o] = o
+    for p in range(Wp):
+        o = Lw + p
+        src_wi = int(topo.wl_pairs[p, 0])
+        dst_wi = int(topo.wl_pairs[p, 1])
+        o_buf[o] = rx0 + dst_wi
+        # rx sub-channel slot: each receiver serves RXW concurrent streams
+        slot = dst_wi * RXW + (src_wi % RXW)
+        o_wo[o] = Lw + EJ_WAYS * S + slot
+        o_is_wl[o] = True
+    for s in range(topo.n_switches):
+        o = Lw + Wp + s
+        o_wo[o] = Lw + s          # base slot; step adds (vc % ways) * S
+        o_is_ej[o] = True
+    assert rt.n_outputs == Lw + Wp + topo.n_switches
+    assert Lw + EJ_WAYS * S + n_wl_slots <= Wout + 1, (Lw, S, n_wl_slots, Wout)
+
+    births = np.full((N, K), NO_PKT, np.int32)
+    births[:, :tt.k] = tt.births
+    dests = np.zeros((N, K), np.int32)
+    dests[:, :tt.k] = tt.dests
+
+    ctrl_cycles = max(1, phy.ctrl_packet_flits * serv_wl)
+
+    ss = SimStatic(
+        b_dst=jnp.asarray(b_dst), b_serv=jnp.asarray(b_serv),
+        b_lat=jnp.asarray(b_lat), b_epb=jnp.asarray(b_epb),
+        b_depth=jnp.asarray(b_depth), b_wi=jnp.asarray(b_wi),
+        b_is_rx=jnp.asarray(b_is_rx),
+        b_ej_ways=jnp.asarray(b_ej_ways), s_pad=jnp.int32(S),
+        next_out=jnp.asarray(next_out),
+        o_buf=jnp.asarray(o_buf), o_wo=jnp.asarray(o_wo),
+        o_is_wl=jnp.asarray(o_is_wl), o_is_ej=jnp.asarray(o_is_ej),
+        n_wi=jnp.int32(n_wi), rx0=jnp.int32(rx0),
+        inj_buf=jnp.asarray(Lw + np.arange(N, dtype=np.int32)),
+        src_switch=jnp.asarray(tt.src_switch.astype(np.int32)),
+        births=jnp.asarray(births), dests=jnp.asarray(dests),
+        pkt_len=jnp.int32(phy.pkt_flits), warmup=jnp.int32(sim.warmup),
+        serv_wl=jnp.int32(serv_wl),
+        lat_wl=jnp.int32(pipe_stages + serv_wl),
+        ctrl_cycles=jnp.int32(ctrl_cycles),
+        mac_token=jnp.asarray(sim.mac == MacMode.TOKEN),
+        wl_sender_cap=jnp.asarray(medium != "crossbar"),
+        wl_single=jnp.asarray(medium == "single"),
+        wl_rx_busy=jnp.asarray(medium != "crossbar"),
+        sleepy=jnp.asarray(bool(sim.sleepy_rx)),
+    )
+    return PackedSim(ss=ss, B=B, Wout=Wout, n_cores=topo.n_cores, Lw=Lw,
+                     n_inj=n_inj, topo=topo, rt=rt, phy=phy, sim=sim)
+
+
+def run(ps: PackedSim, cycles: int | None = None) -> SimState:
+    cycles = cycles or ps.sim.cycles
+    st = init_state(ps.B, ps.ss.births.shape[0])
+    return jax.block_until_ready(
+        _run(ps.ss, st, cycles, ps.B, ps.Wout))

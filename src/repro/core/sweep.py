@@ -1,15 +1,38 @@
-"""High-level experiment drivers for the paper's evaluations (§IV.B-D)."""
+"""High-level experiment drivers for the paper's evaluations (§IV.B-D).
+
+Two APIs:
+
+- ``run_point``: simulate one (system, fabric, traffic) point.  Kept as the
+  simple entry point; internally it is a batch of one.
+- ``run_sweep_batched``: simulate a whole grid of points (a figure's worth)
+  in as few XLA launches as possible.  Points are grouped by padded bucket
+  shape; within a candidate group the pack dims are *harmonized* (every
+  point re-packed with the group's max dims as floors — padding is
+  semantically inert) so that, e.g., three fabrics of the same system size
+  share one launch.  Each group runs through ``simulator.run_batch`` —
+  one ``lax.map`` scan, sharded across host devices when available — and
+  metrics come back through the vmapped ``metrics.compute_metrics_batch``.
+
+Grouping rules (see README "Batched sweeps"): points can share a group iff
+they have the same number of traffic sources N (padded shapes [N, K] only
+harmonize over K) and the same simulated cycle count (the scan length is a
+static compile parameter; warm-up is traced and may differ).  Everything
+else — fabric, topology, loads, seeds, PHY values, MAC mode, medium — is
+traced data and batches freely.
+"""
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Iterable
+from typing import Iterable, Sequence
 
 from repro.core import simulator, traffic
 from repro.core.constants import DEFAULT_PHY, Fabric, PhyParams, SimParams
-from repro.core.metrics import Metrics, compute_metrics
+from repro.core.metrics import Metrics, compute_metrics_batch
 from repro.core.routing import compute_routing
 from repro.core.topology import Topology, build_xcym
+
+HARMONIZED_DIMS = ("B", "S", "R", "K", "CS", "CR")
 
 
 @functools.lru_cache(maxsize=64)
@@ -18,6 +41,82 @@ def _cached_system(n_chips: int, n_mem: int, fabric: Fabric, phy: PhyParams,
     topo = build_xcym(n_chips, n_mem, fabric, phy)
     rt = compute_routing(topo, wireless_weight=wireless_weight)
     return topo, rt
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepPoint:
+    """One evaluation point of a figure grid (run_point's argument list)."""
+
+    n_chips: int
+    n_mem: int
+    fabric: Fabric
+    load: float
+    p_mem: float = 0.2
+    phy: PhyParams = DEFAULT_PHY
+    sim: SimParams = dataclasses.field(default_factory=SimParams)
+    app: str | None = None
+    wireless_weight: float = 3.0
+    name: str | None = None
+
+
+def _build_point(p: SweepPoint):
+    """Host-side construction: topology, routing, traffic table, label."""
+    topo, rt = _cached_system(p.n_chips, p.n_mem, p.fabric, p.phy,
+                              p.wireless_weight)
+    if p.app is None:
+        tt = traffic.uniform_random(topo, p.load, p.p_mem, p.sim.cycles,
+                                    p.phy.pkt_flits, seed=p.sim.seed)
+    else:
+        tt = traffic.application(topo, traffic.APP_MODELS[p.app],
+                                 p.sim.cycles, p.phy.pkt_flits,
+                                 seed=p.sim.seed, load_scale=p.load)
+    label = p.name or f"{topo.name}/load={p.load}/p_mem={p.p_mem}" \
+        + (f"/{p.app}" if p.app else "")
+    return topo, rt, tt, label
+
+
+def run_sweep_batched(points: Sequence[SweepPoint],
+                      cycles: int | None = None,
+                      devices: int | None = None) -> list[Metrics]:
+    """Simulate a grid of points in as few XLA launches as possible.
+
+    Returns one ``Metrics`` per point, in input order.  Results are equal
+    (bitwise, not merely allclose) to ``[run_point(...) for each point]``:
+    batching only changes how many points ride in one launch, never the
+    per-point program.
+    """
+    built = [_build_point(p) for p in points]
+    natural = [simulator.pack_dims(topo, tt)
+               for topo, _, tt, _ in built]
+
+    # group by (N sources, scan length); harmonize pack dims within a group
+    groups: dict[tuple, list[int]] = {}
+    for i, (p, (_, _, tt, _)) in enumerate(zip(points, built)):
+        key = (tt.n_sources, cycles or p.sim.cycles)
+        groups.setdefault(key, []).append(i)
+
+    results: list[Metrics | None] = [None] * len(points)
+    for idxs in groups.values():
+        floors = {d: max(natural[i][d] for i in idxs)
+                  for d in HARMONIZED_DIMS}
+        packed = {}
+        for i in idxs:
+            topo, rt, tt, _ = built[i]
+            packed[i] = simulator.pack(topo, rt, tt, points[i].phy,
+                                       points[i].sim, floors=floors)
+        # harmonized dims should unify shapes; split defensively by shape
+        by_shape: dict[tuple, list[int]] = {}
+        for i in idxs:
+            by_shape.setdefault(packed[i].shape_key(), []).append(i)
+        for sub in by_shape.values():
+            pss = [packed[i] for i in sub]
+            st = simulator.run_batch(pss, cycles=cycles, devices=devices)
+            ms = compute_metrics_batch(
+                pss, st, [built[i][3] for i in sub],
+                [built[i][2].offered_load for i in sub], cycles=cycles)
+            for i, m in zip(sub, ms):
+                results[i] = m
+    return results  # type: ignore[return-value]
 
 
 def run_point(
@@ -32,20 +131,14 @@ def run_point(
     wireless_weight: float = 3.0,
     name: str | None = None,
 ) -> Metrics:
-    """Simulate one (system, fabric, traffic) point and return §IV metrics."""
-    topo, rt = _cached_system(n_chips, n_mem, fabric, phy, wireless_weight)
-    if app is None:
-        tt = traffic.uniform_random(topo, load, p_mem, sim.cycles,
-                                    phy.pkt_flits, seed=sim.seed)
-    else:
-        tt = traffic.application(topo, traffic.APP_MODELS[app], sim.cycles,
-                                 phy.pkt_flits, seed=sim.seed,
-                                 load_scale=load)
-    ps = simulator.pack(topo, rt, tt, phy, sim)
-    st = simulator.run(ps)
-    label = name or f"{topo.name}/load={load}/p_mem={p_mem}" \
-        + (f"/{app}" if app else "")
-    return compute_metrics(ps, st, label, tt.offered_load)
+    """Simulate one (system, fabric, traffic) point and return §IV metrics.
+
+    Implemented as a batch of one through the batched sweep engine.
+    """
+    return run_sweep_batched([SweepPoint(
+        n_chips=n_chips, n_mem=n_mem, fabric=fabric, load=load, p_mem=p_mem,
+        phy=phy, sim=sim, app=app, wireless_weight=wireless_weight,
+        name=name)])[0]
 
 
 def saturation_bandwidth(n_chips: int, n_mem: int, fabric: Fabric,
@@ -57,5 +150,7 @@ def saturation_bandwidth(n_chips: int, n_mem: int, fabric: Fabric,
 def latency_sweep(n_chips: int, n_mem: int, fabric: Fabric,
                   loads: Iterable[float], p_mem: float = 0.2,
                   **kw) -> list[Metrics]:
-    return [run_point(n_chips, n_mem, fabric, load=l, p_mem=p_mem, **kw)
-            for l in loads]
+    """Latency-vs-load curve for one fabric, batched into one launch."""
+    return run_sweep_batched([
+        SweepPoint(n_chips=n_chips, n_mem=n_mem, fabric=fabric, load=l,
+                   p_mem=p_mem, **kw) for l in loads])

@@ -160,16 +160,22 @@ def _analyze_comp(lines: list[str], n_devices: int) -> CompStats:
                       and c in line.split("condition=")[1] else "call")
             st.calls.append((c, kind, line))
 
-        # dot flops
-        dm = re.search(r"\bdot\(%?([\w\.\-]+)", rhs)
+        # dot flops.  Newer HLO pretty-printers put operand types inline
+        # (``dot(f32[64,64]{1,0} %lhs, ...)``); read the lhs shape from
+        # there, falling back to the operand-name lookup of older dumps.
+        dm = re.search(
+            r"\bdot\((?:([a-z0-9]+)\[([\d,]*)\]\S*\s+)?%?([\w\.\-]+)", rhs)
         if dm:
-            lhs = dm.group(1)
             cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+            if dm.group(1) in _DT_BYTES and dm.group(2) is not None:
+                lhs_dims = [int(d) for d in dm.group(2).split(",") if d]
+            else:
+                lhs_dims = shapes.get(dm.group(3))
             k = 1
-            if cm and lhs in shapes:
+            if cm and lhs_dims is not None:
                 for idx in cm.group(1).split(","):
                     if idx:
-                        k *= shapes[lhs][int(idx)]
+                        k *= lhs_dims[int(idx)]
             out_n = 1
             for d in out_dims:
                 out_n *= d

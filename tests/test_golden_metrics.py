@@ -1,0 +1,88 @@
+"""Fixed-seed golden-metrics regression harness.
+
+Pins ``run_point`` results for one wired and one wireless fabric against
+committed golden values, so simulator refactors cannot silently shift the
+paper's numbers.  Integer event counts must match exactly; derived floats
+within 1e-6 relative.
+
+Regenerate (after an *intentional* semantic change) with:
+
+    PYTHONPATH=src python tests/test_golden_metrics.py --regen
+
+or ``REGEN_GOLDENS=1 pytest tests/test_golden_metrics.py``.
+"""
+import json
+import os
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core.constants import Fabric, SimParams
+from repro.core.sweep import run_point
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "goldens"
+SIM = SimParams(cycles=1500, warmup=300, seed=0)
+
+CASES = {
+    "wireless_4c4m_load02": dict(n_chips=4, n_mem=4, fabric=Fabric.WIRELESS,
+                                 load=0.2, p_mem=0.2),
+    "interposer_4c4m_load02": dict(n_chips=4, n_mem=4,
+                                   fabric=Fabric.INTERPOSER,
+                                   load=0.2, p_mem=0.2),
+}
+
+INT_FIELDS = ("pkts_delivered", "flits_delivered", "flits_injected")
+FLOAT_FIELDS = ("offered_load", "throughput", "bw_gbps_core",
+                "avg_pkt_latency", "avg_pkt_energy_pj", "energy_pj_bit")
+
+
+def _measure(case: dict) -> dict:
+    kw = dict(case)
+    kw["fabric"] = Fabric(kw["fabric"])
+    m = run_point(sim=SIM, **kw)
+    rec = {f: int(getattr(m, f)) for f in INT_FIELDS}
+    rec.update({f: float(getattr(m, f)) for f in FLOAT_FIELDS})
+    rec["energy_breakdown"] = {k: float(v)
+                               for k, v in m.energy_breakdown.items()}
+    return rec
+
+
+def _regen() -> None:
+    GOLDEN_DIR.mkdir(exist_ok=True)
+    for name, case in CASES.items():
+        rec = {"case": {**case, "fabric": int(case["fabric"])},
+               "sim": {"cycles": SIM.cycles, "warmup": SIM.warmup,
+                       "seed": SIM.seed},
+               "metrics": _measure(case)}
+        path = GOLDEN_DIR / f"{name}.json"
+        path.write_text(json.dumps(rec, indent=2, sort_keys=True) + "\n")
+        print(f"wrote {path}")
+
+
+@pytest.mark.parametrize("name", list(CASES))
+def test_golden_metrics(name):
+    if os.environ.get("REGEN_GOLDENS"):
+        _regen()
+    path = GOLDEN_DIR / f"{name}.json"
+    golden = json.loads(path.read_text())
+    assert golden["sim"] == {"cycles": SIM.cycles, "warmup": SIM.warmup,
+                             "seed": SIM.seed}, \
+        "golden was generated with different sim params — regenerate"
+    got = _measure(CASES[name])
+    want = golden["metrics"]
+    for f in INT_FIELDS:
+        assert got[f] == want[f], (name, f, got[f], want[f])
+    for f in FLOAT_FIELDS:
+        assert got[f] == pytest.approx(want[f], rel=1e-6), (name, f)
+    for k, v in want["energy_breakdown"].items():
+        assert got["energy_breakdown"][k] == pytest.approx(v, rel=1e-6), \
+            (name, k)
+
+
+if __name__ == "__main__":
+    import sys
+    if "--regen" in sys.argv:
+        _regen()
+    else:
+        sys.exit("usage: python tests/test_golden_metrics.py --regen")

@@ -1,6 +1,11 @@
 """Hypothesis property tests over the simulator's invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import simulator, traffic
 from repro.core.constants import DEFAULT_PHY, Fabric, SimParams
