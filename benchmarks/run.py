@@ -11,13 +11,14 @@ import time
 def main() -> None:
     from benchmarks import (ablations, fig2_uniform, fig3_latency,
                             fig4_cc_traffic, fig5_mc_traffic, fig6_apps,
-                            simspeed)
+                            fig7_ml_traces, simspeed)
     suites = {
         "fig2": fig2_uniform.main,
         "fig3": fig3_latency.main,
         "fig4": fig4_cc_traffic.main,
         "fig5": fig5_mc_traffic.main,
         "fig6": fig6_apps.main,
+        "fig7": fig7_ml_traces.main,
         "ablations": ablations.main,
         "simspeed": simspeed.main,
     }

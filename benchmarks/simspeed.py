@@ -13,8 +13,11 @@ Reports, on a fixed 8-point grid (2 fabrics x 4 loads, 4C4M):
   this engine (scatter-free step + batching + device sharding); batched-vs-
   sequential isolates the batching/sharding share on the same step.
 
-A correctness line asserts batched metrics == sequential metrics.
+A correctness line asserts batched metrics == sequential metrics.  All
+numbers are also written to ``BENCH_simspeed.json`` (uploaded as a CI
+artifact) so the perf trajectory is tracked run over run.
 """
+import json
 import time
 
 from repro.core import simulator, simulator_ref, traffic
@@ -30,11 +33,13 @@ GRID = [(fab, load)
         for fab in (Fabric.WIRELESS, Fabric.INTERPOSER)
         for load in (0.05, 0.2, 0.5, 1.0)]
 REF_POINTS = 2          # reference engine is slow; extrapolate points/sec
+JSON_PATH = "BENCH_simspeed.json"
 
 
 def main() -> None:
     pts = [SweepPoint(4, 4, fab, load=load, sim=SIM) for fab, load in GRID]
     G = len(pts)
+    rec: dict = {"grid_points": G, "cycles": SIM.cycles}
 
     # single-point cycle rate (continuity with the seed's simspeed output)
     topo = build_xcym(4, 4, Fabric.WIRELESS)
@@ -45,6 +50,7 @@ def main() -> None:
     t0 = time.perf_counter()
     simulator.run(ps)
     dt = time.perf_counter() - t0
+    rec["cycles_per_sec"] = SIM.cycles / dt
     emit(f"simspeed,cycles_per_sec,{SIM.cycles/dt:.0f}")
     emit(f"simspeed,us_per_cycle,{dt/SIM.cycles*1e6:.1f}")
 
@@ -75,6 +81,8 @@ def main() -> None:
         # hard-fail: this is the only place CI exercises the multi-device
         # pmap-sharded batch path (pytest sees a single device)
         raise SystemExit("simspeed: batched metrics diverged from sequential")
+    rec["seq_points_per_sec"] = G / t_seq
+    rec["batched_points_per_sec"] = G / t_bat
     emit(f"simspeed,seq_points_per_sec,{G/t_seq:.3f}")
     emit(f"simspeed,batched_points_per_sec,{G/t_bat:.3f}")
 
@@ -91,10 +99,18 @@ def main() -> None:
     for r in ref:
         simulator_ref.run(r)
     t_ref = (time.perf_counter() - t0) / REF_POINTS
+    rec["ref_seq_points_per_sec"] = 1 / t_ref
+    rec["speedup_batched_vs_seq"] = t_seq / t_bat
+    rec["speedup_batched_vs_ref_seq"] = t_ref * G / t_bat
+    rec["speedup_seq_vs_ref_seq"] = t_ref * G / t_seq
     emit(f"simspeed,ref_seq_points_per_sec,{1/t_ref:.3f}")
     emit(f"simspeed,speedup_batched_vs_seq,{t_seq/t_bat:.2f}")
     emit(f"simspeed,speedup_batched_vs_ref_seq,{t_ref*G/t_bat:.2f}")
     emit(f"simspeed,speedup_seq_vs_ref_seq,{t_ref*G/t_seq:.2f}")
+    with open(JSON_PATH, "w") as f:
+        json.dump({k: round(v, 4) if isinstance(v, float) else v
+                   for k, v in rec.items()}, f, indent=1, sort_keys=True)
+    emit(f"simspeed,json,{JSON_PATH}")
 
 
 if __name__ == "__main__":

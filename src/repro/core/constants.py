@@ -9,6 +9,12 @@ import dataclasses
 import enum
 
 
+# Max wireless interfaces the simulators' padded tables support — shared by
+# both engines' state layouts and the trace-table multicast masks
+# (traffic.from_trace), which must agree on the receiver-set width.
+WMAX = 16
+
+
 class LinkClass(enum.IntEnum):
     """Physical classes of links in the multichip system."""
 

@@ -40,11 +40,56 @@ class Metrics:
     flits_delivered: int
     flits_injected: int
     energy_breakdown: dict
+    # trace-run extensions (zero/empty for open-loop traffic): phase
+    # barrier progress and the wireless broadcast occupancy counters
+    phases_done: int = 0
+    n_phases: int = 0
+    phase_end: list = dataclasses.field(default_factory=list)
+    phase_flits: list = dataclasses.field(default_factory=list)
+    wl_tx_flits: int = 0       # shared-medium occupancies (sender side)
+    wl_rx_flits: int = 0       # receptions (multicast: one per member copy)
+
+    @property
+    def trace_done(self) -> bool:
+        return self.n_phases > 0 and self.phases_done >= self.n_phases
+
+    @property
+    def trace_cycles(self) -> int:
+        """Cycle the last phase closed (0 if the trace did not finish)."""
+        return self.phase_end[-1] if self.trace_done and self.phase_end else 0
 
     def row(self) -> str:
         return (f"{self.name},{self.offered_load:.4f},{self.throughput:.4f},"
                 f"{self.bw_gbps_core:.3f},{self.avg_pkt_latency:.1f},"
                 f"{self.avg_pkt_energy_pj:.0f}")
+
+
+def phase_durations(m: Metrics) -> list[int]:
+    """Per-phase cycle counts (completion-to-completion deltas)."""
+    out, prev = [], 0
+    for p in range(m.phases_done):
+        out.append(m.phase_end[p] - prev)
+        prev = m.phase_end[p]
+    return out
+
+
+def collective_summary(m: Metrics, labels: Sequence[str]) -> dict:
+    """Aggregate per-phase timings/flits by collective label.
+
+    ``labels`` is the emitted table's ``phase_labels``; fan-out relay
+    phases (``<label>/fanout``) fold into their parent collective.
+    Returns ``{label: {"cycles": int, "flits": int, "phases": int}}`` in
+    first-appearance order — the per-collective view of a trace run.
+    """
+    durs = phase_durations(m)
+    out: dict = {}
+    for p, lab in enumerate(labels[:m.phases_done]):
+        base = lab.rsplit("/fanout", 1)[0]
+        rec = out.setdefault(base, {"cycles": 0, "flits": 0, "phases": 0})
+        rec["cycles"] += durs[p]
+        rec["flits"] += m.phase_flits[p] if p < len(m.phase_flits) else 0
+        rec["phases"] += 1
+    return out
 
 
 @jax.jit
@@ -92,6 +137,7 @@ def compute_metrics_batch(pss: Sequence[PackedSim], st: SimState,
         lat_pkts = int(st.lat_pkts[g])
         lat = (float(st.lat_sum[g]) / lat_pkts if lat_pkts else float("nan"))
         thr = flits / window / ps.n_cores
+        n_ph = int(ps.ss.n_phases)
         out.append(Metrics(
             name=names[g],
             offered_load=offered_loads[g],
@@ -105,6 +151,13 @@ def compute_metrics_batch(pss: Sequence[PackedSim], st: SimState,
             flits_injected=int(st.flits_inj[g]),
             energy_breakdown=dict(links=float(el[g]), switch=float(es[g]),
                                   ctrl=float(ec[g]), rx=float(er[g])),
+            phases_done=int(st.cur_phase[g]),
+            n_phases=n_ph,
+            phase_end=[int(x) for x in np.asarray(st.phase_end[g])[:n_ph]],
+            phase_flits=[int(x)
+                         for x in np.asarray(st.phase_flits[g])[:n_ph]],
+            wl_tx_flits=int(st.wl_tx_flits[g]),
+            wl_rx_flits=int(st.wl_rx_flits[g]),
         ))
     return out
 

@@ -36,6 +36,25 @@ selected by ``PhyParams.wireless_medium``:
 TOKEN mode additionally requires a whole buffered packet before
 transmission [7] (and therefore packet-deep WI buffers).
 
+Trace extensions (ISSUE 2; see traffic.py "Trace tables")
+---------------------------------------------------------
+*Multicast delivery*: a packet whose table slot encodes a multicast group
+(``dests = -(1+m)``) routes to the group's anchor WI and, at the air hop,
+claims a VC at EVERY member rx buffer (all-or-nothing, same rotating
+arbitration), then transmits each flit once — one shared-channel
+occupancy — while every member copy receives it via the ``src_of``
+inverse map.  Copies continue as ordinary unicasts to their per-WI
+destinations (``mc_dst``).  Transmit energy is counted once per broadcast
+(only the lowest-member "primary" copy increments ``counts_into``);
+``wl_tx_flits``/``wl_rx_flits`` count occupancies vs receptions.
+
+*Phase barriers*: packets carry a phase id; injection is gated on the
+packet's phase being open, and a phase closes when its expected ejection
+count (``phase_need``) is reached — traces are dependency-ordered, not
+open-loop.  ``phase_end``/``phase_flits`` feed the per-phase metrics.
+With ``n_phases == 0`` and no groups the step reduces bitwise to the
+open-loop unicast engine (goldens pin this).
+
 Simplifications (documented in DESIGN.md): instant credit return; one VC
 allocation per target buffer per cycle; time-rotating (round-robin
 equivalent) arbitration priority; an input link's VCs may forward to
@@ -81,7 +100,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.constants import LinkClass, MacMode, PhyParams, SimParams
+from repro.core.constants import (WMAX, LinkClass, MacMode, PhyParams,
+                                  SimParams)
 from repro.core.routing import RoutingTables
 from repro.core.topology import Topology
 from repro.core.traffic import NO_PKT, TrafficTable
@@ -89,7 +109,6 @@ from repro.core.traffic import NO_PKT, TrafficTable
 V = 8            # virtual channels per port (paper §IV)
 DEPTH = 16       # buffer depth in flits (paper §IV)
 DMAX = 12        # arrival-pipe depth >= max link latency
-WMAX = 16        # max wireless interfaces
 RXWMAX = 4       # max concurrent rx streams per WI (4-channel stacks, §IV)
 EJ_WAYS = 4      # parallel ejection channels at memory-stack switches
 
@@ -144,6 +163,16 @@ class SimStatic(NamedTuple):
     wl_single: jnp.ndarray   # bool: strict single shared channel
     wl_rx_busy: jnp.ndarray  # bool: serialize each receiver (non-crossbar)
     sleepy: jnp.ndarray      # bool
+    # trace tables: phase barriers + multicast groups (see traffic.py).
+    # For non-trace traffic these are all-zero/empty-semantics and the
+    # step reduces bitwise to the unicast open-loop engine.
+    phases: jnp.ndarray      # [N, K] phase id per packet slot
+    phase_need: jnp.ndarray  # [P] ejections closing each phase
+    n_phases: jnp.ndarray    # scalar int32 (0 = open-loop, no gating)
+    mc_member: jnp.ndarray   # [M, WMAX] bool: receiver-WI set per group
+    mc_dst: jnp.ndarray      # [M, WMAX] final dst switch of the copy at WI w
+    mc_route: jnp.ndarray    # [M] pre-air routing anchor switch
+    mc_prim: jnp.ndarray     # [M] lowest member WI (energy-primary copy)
 
 
 class SimState(NamedTuple):
@@ -162,6 +191,7 @@ class SimState(NamedTuple):
     rcvd: jnp.ndarray         # [B, V]
     sent: jnp.ndarray         # [B, V]
     src_of: jnp.ndarray       # [B, V] flat upstream slot feeding this vc (-1)
+    mc_id: jnp.ndarray        # [B, V] multicast group id (-1 = unicast)
     pipe: jnp.ndarray         # [B, V, DMAX]
     busy_until: jnp.ndarray   # [B]
     wl_busy_until: jnp.ndarray  # scalar: shared-channel mode
@@ -169,6 +199,11 @@ class SimState(NamedTuple):
     q_head: jnp.ndarray       # [N]
     inj_vc: jnp.ndarray       # [N]
     inj_pushed: jnp.ndarray   # [N]
+    # phase barrier (trace tables)
+    cur_phase: jnp.ndarray    # scalar: currently open phase
+    phase_del: jnp.ndarray    # scalar: ejections in the open phase
+    phase_end: jnp.ndarray    # [P] completion cycle + 1 (0 = not done)
+    phase_flits: jnp.ndarray  # [P] flits delivered while phase was open
     # stats (post-warmup)
     flits_inj: jnp.ndarray
     flits_del: jnp.ndarray
@@ -178,11 +213,13 @@ class SimState(NamedTuple):
     counts_into: jnp.ndarray  # [B] link-traversal events
     count_switch: jnp.ndarray
     ctrl_count: jnp.ndarray
+    wl_tx_flits: jnp.ndarray  # wireless flit *transmissions* (sender side)
+    wl_rx_flits: jnp.ndarray  # wireless flit receptions (multicast: copies)
     awake_cycles: jnp.ndarray
     sleep_cycles: jnp.ndarray
 
 
-def init_state(B: int, N: int) -> SimState:
+def init_state(B: int, N: int, P: int = 1) -> SimState:
     i32 = jnp.int32
     zBV = jnp.zeros((B, V), i32)
     return SimState(
@@ -191,16 +228,19 @@ def init_state(B: int, N: int) -> SimState:
         out_is_wl=jnp.zeros((B, V), bool), out_is_ej=jnp.zeros((B, V), bool),
         out_vc=jnp.full((B, V), -1, i32),
         phase2=jnp.zeros((B, V), bool), rcvd=zBV, sent=zBV,
-        src_of=jnp.full((B, V), -1, i32),
+        src_of=jnp.full((B, V), -1, i32), mc_id=jnp.full((B, V), -1, i32),
         pipe=jnp.zeros((B, V, DMAX), i32), busy_until=jnp.zeros((B,), i32),
         wl_busy_until=jnp.int32(0),
         q_head=jnp.zeros((N,), i32), inj_vc=jnp.full((N,), -1, i32),
         inj_pushed=jnp.zeros((N,), i32),
+        cur_phase=jnp.int32(0), phase_del=jnp.int32(0),
+        phase_end=jnp.zeros((P,), i32), phase_flits=jnp.zeros((P,), i32),
         flits_inj=jnp.int32(0), flits_del=jnp.int32(0), pkts_del=jnp.int32(0),
         lat_sum=jnp.float32(0), lat_pkts=jnp.int32(0),
         counts_into=jnp.zeros((B,), i32), count_switch=jnp.int32(0),
-        ctrl_count=jnp.int32(0), awake_cycles=jnp.int32(0),
-        sleep_cycles=jnp.int32(0),
+        ctrl_count=jnp.int32(0),
+        wl_tx_flits=jnp.int32(0), wl_rx_flits=jnp.int32(0),
+        awake_cycles=jnp.int32(0), sleep_cycles=jnp.int32(0),
     )
 
 
@@ -234,6 +274,10 @@ def make_step(B: int):
         post = (t >= ss.warmup).astype(i32)
         rot = t % NC
         S = ss.next_out.shape[0]
+        M = ss.mc_member.shape[0]
+        P = ss.phase_need.shape[0]
+        warr = jnp.arange(WMAX, dtype=i32)
+        rx_ids = jnp.clip(ss.rx0 + warr, 0, B - 1)           # [W]
 
         # static candidate slot indices (flattened (buffer, vc) slots)
         cw = ss.cands[jnp.clip(ss.b_src_sw, 0, S - 1)]       # [B, CS]
@@ -271,12 +315,25 @@ def make_step(B: int):
         free_ok = free_mask[ob_c0] & allowed                     # [B, V, V]
         has_free_c = free_ok.any(axis=-1)
         first_free_c = jnp.argmax(free_ok, axis=-1).astype(i32)  # [B, V]
-        need = active & (st.out_vc < 0) & ~st.out_is_ej & (occ > 0) \
-            & has_free_c & (st.out_buf < B)
+        # multicast senders (group id set, air hop ahead): need a VC at
+        # EVERY member rx buffer — the claim is all-or-nothing.  A copy
+        # (phase2 set at rx install) never re-triggers multicast semantics.
+        is_mc = (st.mc_id >= 0) & st.out_is_wl & ~st.phase2 & active
+        mcid_c = jnp.clip(st.mc_id, 0, M - 1)
+        member = ss.mc_member[mcid_c]                            # [B, V, W]
+        free_any_rx = free_mask[rx_ids].any(axis=1)              # [W]
+        free_all_mc = jnp.where(member, free_any_rx[None, None, :],
+                                True).all(axis=-1)               # [B, V]
+        need_base = active & (st.out_vc < 0) & ~st.out_is_ej & (occ > 0) \
+            & (st.out_buf < B)
+        need_uni = need_base & ~is_mc & has_free_c
+        need_mc = need_base & is_mc & free_all_mc
+        need = need_uni | need_mc
         score = (flat2d - rot) % NC                              # unique/slot
         code = jnp.where(need, score * NCp1 + flat2d, BIGC)
         codef = code.reshape(-1)
         obf0 = st.out_buf.reshape(-1)
+        mcf0 = jnp.where(is_mc, st.mc_id, -1).reshape(-1)
 
         # winner (min code) per wired target buffer: contenders live at the
         # buffers feeding the target's transmitting switch.  The gathered
@@ -285,24 +342,43 @@ def make_step(B: int):
         g_w = jax.lax.optimization_barrier((codef[idx_w], obf0[idx_w]))
         m_w = cw_ok & (g_w[1] == tgt_ids)
         win_code_w = jnp.where(m_w, g_w[0], BIGC).min(axis=(1, 2))
-        # winner per wireless rx target: contenders at sender WI switches
-        g_r = jax.lax.optimization_barrier((codef[idx_r], obf0[idx_r]))
-        m_r = cr_ok & (g_r[1] == rx_tgt)
+        # winner per wireless rx target: contenders at sender WI switches;
+        # a multicast contends at every member receiver simultaneously
+        g_r = jax.lax.optimization_barrier(
+            (codef[idx_r], obf0[idx_r], mcf0[idx_r]))
+        memb_r = (g_r[2] >= 0) & ss.mc_member[
+            jnp.clip(g_r[2], 0, M - 1), warr[:, None, None]]
+        m_r = cr_ok & ((g_r[1] == rx_tgt) | memb_r)
         win_code_r = jnp.where(m_r, g_r[0], BIGC).min(axis=(1, 2))
 
         rx_slot = jnp.clip(b_ids - ss.rx0, 0, WMAX - 1)
         win_code = jnp.where(ss.b_is_rx, win_code_r[rx_slot], win_code_w)
         has_win = win_code < BIGC                                # [B]
         wsrc = jnp.where(has_win, win_code % NCp1, 0)            # flat slot
-        # source side: my claim won iff my code is the target's winning code
-        win = need & (win_code[ob_c0] == code)
+        # source side: my claim won iff my code is the target's winning
+        # code; a multicast claim stands only if it won EVERY member
+        win_all_mc = jnp.where(
+            member, win_code_r[None, None, :] == code[:, :, None],
+            True).all(axis=-1)                                   # [B, V]
+        win_uni = need_uni & (win_code[ob_c0] == code)
+        win_mc = need_mc & win_all_mc
+        win = win_uni | win_mc
 
         def g(a):            # winner's field per target buffer -> [B]
             return a.reshape(-1)[wsrc]
 
-        vstar = g(first_free_c)                                  # [B]
-        claimed = has_win[:, None] & (vstar[:, None] == vcol)    # [B, V]
-        dst_w = g(st.pkt_dst)
+        # target side: suppress a partial multicast winner (nobody claims
+        # that buffer this cycle), and deliver each member copy to its own
+        # per-WI destination from the group table
+        w_mc = mcf0[wsrc]                                        # [B]
+        w_group_ok = win_all_mc.reshape(-1)[wsrc]                # [B]
+        has_win_eff = has_win & ((w_mc < 0) | w_group_ok)
+        vfree_self = jnp.argmax(free_mask, axis=-1).astype(i32)  # [B]
+        vstar = jnp.where(ss.b_is_rx, vfree_self, g(first_free_c))
+        claimed = has_win_eff[:, None] & (vstar[:, None] == vcol)  # [B, V]
+        mc_dst_w = ss.mc_dst[jnp.clip(w_mc, 0, M - 1), rx_slot]  # [B]
+        dst_w = jnp.where(ss.b_is_rx & (w_mc >= 0),
+                          jnp.clip(mc_dst_w, 0, S - 1), g(st.pkt_dst))
         d_oo, d_ob, d_owo, d_owl, d_oej = _route_fields(ss, ss.b_dst, dst_w)
 
         def upd(old, val_b):
@@ -319,11 +395,14 @@ def make_step(B: int):
         out_is_ej = upd(st.out_is_ej, d_oej)
         out_vc = jnp.where(claimed, -1, st.out_vc)
         phase2 = upd(st.phase2, g(st.phase2) | ss.b_is_rx)
+        mc_id = upd(st.mc_id, g(st.mc_id))
         rcvd = jnp.where(claimed, 0, rcvd)
         sent = jnp.where(claimed, 0, st.sent)
         src_of = upd(st.src_of, wsrc)
-        # upstream learns its allocated VC
-        out_vc = jnp.where(win, first_free_c, out_vc)
+        # upstream learns its allocated VC (multicast: sentinel "granted";
+        # delivery is receiver-side via src_of, no per-member VC needed)
+        out_vc = jnp.where(win_uni, first_free_c, out_vc)
+        out_vc = jnp.where(win_mc, 0, out_vc)
 
         active = pkt_src >= 0
         occ = jnp.where(active, rcvd - sent, 0)
@@ -335,6 +414,29 @@ def make_step(B: int):
         occ_down = rcvd[ob_c, ovc_c] - sent[ob_c, ovc_c]
         space = ss.b_depth[ob_c] - occ_down - inflight[ob_c, ovc_c]
         link_free = jnp.take(st.busy_until, ob_c) <= t
+        # multicast sender: backpressure is the MINIMUM over its member
+        # copies (located via the src_of inverse map on the rx region) —
+        # a broadcast flit flies only when every member can accept it
+        is_mc = (mc_id >= 0) & out_is_wl & ~phase2 & active      # [B, V]
+        mcid_c = jnp.clip(mc_id, 0, M - 1)
+        member = ss.mc_member[mcid_c]                            # [B, V, W]
+        srcof_rx = src_of[rx_ids]                                # [W, V]
+        occ_rx = occ[rx_ids]
+        infl_rx = inflight[rx_ids]
+        depth_rx = ss.b_depth[rx_ids]                            # [W]
+        cp = srcof_rx[None, None, :, :] \
+            == flat2d[:, :, None, None]                          # [B,V,W,V]
+        BIGS = jnp.int32(1 << 30)
+        cp_space = jnp.where(
+            cp, (depth_rx[:, None] - occ_rx - infl_rx)[None, None],
+            BIGS).min(axis=-1)                                   # [B, V, W]
+        cp_space = jnp.where(cp.any(axis=-1), cp_space, 0)       # no copy yet
+        space_mc = jnp.where(member, cp_space, BIGS).min(axis=-1)
+        space = jnp.where(is_mc, space_mc, space)
+        busy_rx_ok = jnp.take(st.busy_until, rx_ids) <= t        # [W]
+        lf_mc = jnp.where(member, busy_rx_ok[None, None, :],
+                          True).all(axis=-1)
+        link_free = jnp.where(is_mc, lf_mc, link_free)
         # token MAC: wireless transmission only once the whole packet is here
         whole = rcvd >= ss.pkt_len
         wl_ok = ~out_is_wl | ~ss.mac_token | whole
@@ -348,6 +450,7 @@ def make_step(B: int):
         code2 = jnp.where(elig, score * NCp1 + flat2d, BIGC)
         code2f = code2.reshape(-1)
         obf = out_buf.reshape(-1)
+        mcf = jnp.where(is_mc, mc_id, -1).reshape(-1)
 
         # wired-output winners: one flit per link per cycle
         g2_w = jax.lax.optimization_barrier((code2f[idx_w], obf[idx_w]))
@@ -365,10 +468,16 @@ def make_step(B: int):
             m_ej[None] & (way_s[None] == jnp.arange(EJ_WAYS)[:, None, None, None]),
             g_s[0][None], BIGC).min(axis=(2, 3))                 # [EJ, S]
         # wireless rx sub-channels: receiver w serves `rxw` concurrent
-        # streams; a sender's stream is its WI id mod rxw
+        # streams; a sender's stream is its WI id mod rxw.  A multicast
+        # contends at every member receiver (on its own sub-channel) and
+        # transmits only if it wins ALL of them — a single transmission
+        # delivered to the whole receiver set.
         rxw = jnp.maximum(ss.rxw, 1)
-        g2_r = jax.lax.optimization_barrier((code2f[idx_r], obf[idx_r]))
-        m2_r = cr_ok & (g2_r[1] == rx_tgt)                       # [W, CR, V]
+        g2_r = jax.lax.optimization_barrier(
+            (code2f[idx_r], obf[idx_r], mcf[idx_r]))
+        memb2_r = (g2_r[2] >= 0) & ss.mc_member[
+            jnp.clip(g2_r[2], 0, M - 1), warr[:, None, None]]
+        m2_r = cr_ok & ((g2_r[1] == rx_tgt) | memb2_r)           # [W, CR, V]
         r_cand = (ss.b_wi[crc] % rxw)[:, :, None]                # [W, CR, 1]
         win2_wl = jnp.where(
             m2_r[None] & (r_cand[None] == jnp.arange(RXWMAX)[:, None, None, None]),
@@ -381,7 +490,11 @@ def make_step(B: int):
         win2_mine = jnp.where(
             out_is_ej, win2_ej[way_mine, owo_s],
             jnp.where(out_is_wl, win2_wl[r_mine, owo_w], win2_w[ob_c]))
-        fwd = elig & (code2 == win2_mine)
+        r_bv = jnp.broadcast_to(r_mine, (B, V))[:, :, None]      # [B, V, 1]
+        wl_all2 = jnp.where(
+            member, win2_wl[r_bv, warr[None, None, :]] == code2[:, :, None],
+            True).all(axis=-1)                                   # [B, V]
+        fwd = elig & jnp.where(is_mc, wl_all2, code2 == win2_mine)
 
         # wireless sender-side cap: one flit per transmitting WI per cycle
         # (and one WI total in single-channel mode); no-op for the crossbar
@@ -411,6 +524,24 @@ def make_step(B: int):
             lat_ok, (t - born + 1).astype(jnp.float32), 0.0).sum()
         lat_pkts = st.lat_pkts + post * lat_ok.sum().astype(i32)
 
+        # ---- phase barrier bookkeeping (trace tables; raw counts — the
+        # dependency structure must not depend on the stats warm-up)
+        Nn, Kk = ss.phases.shape
+        phv = ss.phases[jnp.clip(pkt_src, 0, Nn - 1),
+                        jnp.clip(pkt_idx, 0, Kk - 1)]            # [B, V]
+        phase_del = st.phase_del \
+            + (tail_ej & (phv == st.cur_phase)).sum().astype(i32)
+        parr = jnp.arange(P, dtype=i32)
+        phase_flits = st.phase_flits + jnp.where(
+            parr == st.cur_phase, ej.sum().astype(i32), 0)
+        in_trace = (ss.n_phases > 0) & (st.cur_phase < ss.n_phases)
+        needed = ss.phase_need[jnp.clip(st.cur_phase, 0, P - 1)]
+        complete = in_trace & (phase_del >= needed)
+        phase_end = jnp.where((parr == st.cur_phase) & complete,
+                              t + 1, st.phase_end)
+        cur_phase = st.cur_phase + complete.astype(i32)
+        phase_del = jnp.where(complete, 0, phase_del)
+
         # non-eject: deliver downstream via the src_of inverse map — each
         # target (buffer, vc) gathers from the unique upstream slot feeding
         # it (identity-checked against out_buf/out_vc to survive slot reuse)
@@ -421,8 +552,16 @@ def make_step(B: int):
             + jnp.where(first_wl, ss.ctrl_cycles, 0)
 
         sv = jnp.clip(src_of, 0, NC - 1)
-        ident = (src_of >= 0) & (obf[sv] == b_ids[:, None]) \
+        # unicast identity: the upstream slot still targets me at my VC.
+        # multicast copy identity: my feeder is a multicast-air sender of
+        # my own group (one transmission fans out to every member copy).
+        is_mc_f = is_mc.reshape(-1)
+        ident_uni = (src_of >= 0) & ~is_mc_f[sv] \
+            & (obf[sv] == b_ids[:, None]) \
             & (out_vc.reshape(-1)[sv] == vcol)
+        ident_mc = (src_of >= 0) & is_mc_f[sv] & ss.b_is_rx[:, None] \
+            & (mc_id >= 0) & (mc_id.reshape(-1)[sv] == mc_id)
+        ident = ident_uni | ident_mc
         incoming = ident & fwd.reshape(-1)[sv]                   # [B, V]
         d_in = jnp.clip(lat_t.reshape(-1)[sv] - 1, 0, DMAX - 1)
         pipe = pipe + (incoming[:, :, None]
@@ -436,9 +575,18 @@ def make_step(B: int):
         wl_busy_until = jnp.where(
             is_wl_fwd.any(),
             t + (jnp.where(is_wl_fwd, serv_t, 0)).max(), st.wl_busy_until)
-        counts_into = st.counts_into + post * incoming.sum(axis=1).astype(i32)
+        # transmit energy is paid once per broadcast: only the group's
+        # primary copy (lowest member WI) counts the wireless traversal
+        prim_buf = ss.rx0 + ss.mc_prim[mcid_c]                   # [B, V]
+        count_ok = ~((mc_id >= 0) & ss.b_is_rx[:, None]
+                     & (b_ids[:, None] != prim_buf))
+        counts_into = st.counts_into \
+            + post * (incoming & count_ok).sum(axis=1).astype(i32)
         count_switch = st.count_switch + post * fwd.sum().astype(i32)
         ctrl_count = st.ctrl_count + post * first_wl.sum().astype(i32)
+        wl_tx_flits = st.wl_tx_flits + post * is_wl_fwd.sum().astype(i32)
+        wl_rx_flits = st.wl_rx_flits \
+            + post * (incoming & ss.b_is_rx[:, None]).sum().astype(i32)
         # the feeding packet's tail has been sent: the link is quiet again
         src_of = jnp.where(ident & tail.reshape(-1)[sv], -1, src_of)
 
@@ -457,8 +605,16 @@ def make_step(B: int):
         ifree = (pkt_src[ib] < 0) & classA[None, :]             # [N, V]
         ihas = ifree.any(axis=1)
         ivc = jnp.argmax(ifree, axis=1).astype(i32)
-        can_new = (st.inj_vc < 0) & (st.q_head < K) & (birth_n <= t) & ihas
-        dst_n = ss.dests[n_ar, qh]
+        # phase gate: a packet injects only once its phase is open
+        ph_ok = (ss.n_phases == 0) | (ss.phases[n_ar, qh] <= cur_phase)
+        can_new = (st.inj_vc < 0) & (st.q_head < K) & (birth_n <= t) \
+            & ihas & ph_ok
+        # multicast slots encode the group as dests = -(1 + m); the packet
+        # routes to the group's anchor and fans out at the air hop
+        dst_raw = ss.dests[n_ar, qh]
+        mcv_n = jnp.where(dst_raw < 0, -(dst_raw + 1), -1)      # [N]
+        dst_n = jnp.where(
+            dst_raw < 0, ss.mc_route[jnp.clip(mcv_n, 0, M - 1)], dst_raw)
         r_oo, r_ob, r_owo, r_owl, r_oej = _route_fields(
             ss, ss.src_switch, dst_n)
 
@@ -485,6 +641,7 @@ def make_step(B: int):
         out_is_ej = iupd(out_is_ej, r_oej)
         out_vc = jnp.where(icl, -1, out_vc)
         phase2 = jnp.where(icl, False, phase2)
+        mc_id = iupd(mc_id, mcv_n)
         rcvd = jnp.where(icl, 0, rcvd)
         sent = jnp.where(icl, 0, sent)
         src_of = jnp.where(icl, -1, src_of)
@@ -518,12 +675,15 @@ def make_step(B: int):
             pkt_src=pkt_src, pkt_idx=pkt_idx, pkt_dst=pkt_dst, born=born,
             out_o=out_o, out_buf=out_buf, out_wo=out_wo, out_is_wl=out_is_wl,
             out_is_ej=out_is_ej, out_vc=out_vc, phase2=phase2,
-            rcvd=rcvd, sent=sent, src_of=src_of,
+            rcvd=rcvd, sent=sent, src_of=src_of, mc_id=mc_id,
             pipe=pipe, busy_until=busy_until, wl_busy_until=wl_busy_until,
             q_head=q_head, inj_vc=inj_vc, inj_pushed=inj_pushed,
+            cur_phase=cur_phase, phase_del=phase_del, phase_end=phase_end,
+            phase_flits=phase_flits,
             flits_inj=flits_inj, flits_del=flits_del, pkts_del=pkts_del,
             lat_sum=lat_sum, lat_pkts=lat_pkts, counts_into=counts_into,
             count_switch=count_switch, ctrl_count=ctrl_count,
+            wl_tx_flits=wl_tx_flits, wl_rx_flits=wl_rx_flits,
             awake_cycles=awake_cycles, sleep_cycles=sleep_cycles,
         )
 
@@ -621,6 +781,8 @@ def pack_dims(topo: Topology, tt: TrafficTable,
         "K": _bucket(tt.k, k_bucket),
         "CS": _bucket(int(indeg.max(initial=1)), 4),
         "CR": _bucket(max(cr_max, 1), 16),
+        "M": _bucket(getattr(tt, "n_mc", 0), 8),
+        "P": _bucket(getattr(tt, "n_phases", 0), 8),
     }
 
 
@@ -768,6 +930,29 @@ def pack(topo: Topology, rt: RoutingTables, tt: TrafficTable,
     dests = np.zeros((N, K), np.int32)
     dests[:, :tt.k] = tt.dests
 
+    # trace tables: phase barriers + multicast groups (all-zero semantics
+    # for the synthetic open-loop generators)
+    Pn = tt.n_phases
+    Mn = tt.n_mc
+    P = max(_bucket(Pn, 8), fl.get("P", 0))
+    M = max(_bucket(Mn, 8), fl.get("M", 0))
+    phases = np.zeros((N, K), np.int32)
+    phase_need = np.zeros(P, np.int32)
+    mc_member = np.zeros((M, WMAX), bool)
+    mc_dst = np.zeros((M, WMAX), np.int32)
+    mc_route = np.zeros(M, np.int32)
+    mc_prim = np.zeros(M, np.int32)
+    if Pn:
+        phases[:, :tt.k] = tt.phases
+        phase_need[:Pn] = tt.phase_need
+    if Mn:
+        mc_member[:Mn] = tt.mc_member
+        mc_dst[:Mn] = np.clip(tt.mc_dst, 0, None)    # -1 pad, member-masked
+        mc_route[:Mn] = tt.mc_route
+        mc_prim[:Mn] = np.argmax(tt.mc_member, axis=1)
+        assert tt.mc_member.shape[1] == WMAX
+        assert tt.mc_member[:Mn].any(axis=1).all(), "empty multicast group"
+
     ctrl_cycles = max(1, phy.ctrl_packet_flits * serv_wl)
 
     ss = SimStatic(
@@ -795,8 +980,13 @@ def pack(topo: Topology, rt: RoutingTables, tt: TrafficTable,
         wl_single=jnp.asarray(medium == "single"),
         wl_rx_busy=jnp.asarray(medium != "crossbar"),
         sleepy=jnp.asarray(bool(sim.sleepy_rx)),
+        phases=jnp.asarray(phases), phase_need=jnp.asarray(phase_need),
+        n_phases=jnp.int32(Pn),
+        mc_member=jnp.asarray(mc_member), mc_dst=jnp.asarray(mc_dst),
+        mc_route=jnp.asarray(mc_route), mc_prim=jnp.asarray(mc_prim),
     )
-    dims = {"B": B, "S": S, "R": R, "K": K, "CS": CS, "CR": CR}
+    dims = {"B": B, "S": S, "R": R, "K": K, "CS": CS, "CR": CR,
+            "M": M, "P": P}
     return PackedSim(ss=ss, B=B, n_cores=topo.n_cores, Lw=Lw,
                      n_inj=n_inj, topo=topo, rt=rt, phy=phy, sim=sim,
                      dims=dims)
@@ -810,8 +1000,8 @@ def _tree_stack(trees):
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
 
 
-def init_state_batch(G: int, B: int, N: int) -> SimState:
-    st = init_state(B, N)
+def init_state_batch(G: int, B: int, N: int, P: int = 1) -> SimState:
+    st = init_state(B, N, P)
     return jax.tree_util.tree_map(
         lambda x: jnp.broadcast_to(x, (G,) + x.shape), st)
 
@@ -843,13 +1033,14 @@ def run_batch(pss: Sequence[PackedSim], cycles: int | None = None,
     cycles = cycles or pss[0].sim.cycles
     B = pss[0].B
     N = int(pss[0].ss.births.shape[0])
+    P = int(pss[0].ss.phase_need.shape[0])
     G = len(pss)
     if G == 1:
-        out = _run_one(pss[0].ss, init_state(B, N), cycles, B)
+        out = _run_one(pss[0].ss, init_state(B, N, P), cycles, B)
         out = jax.tree_util.tree_map(lambda x: x[None], out)
         return jax.block_until_ready(out)
     ss = _tree_stack([ps.ss for ps in pss])
-    st = init_state_batch(G, B, N)
+    st = init_state_batch(G, B, N, P)
     D = devices if devices is not None else jax.local_device_count()
     D = min(D, G)
     if D > 1:
@@ -859,7 +1050,7 @@ def run_batch(pss: Sequence[PackedSim], cycles: int | None = None,
                 lambda x: jnp.repeat(x[-1:], Gp - G, axis=0), ss)
             ss = jax.tree_util.tree_map(
                 lambda a, b: jnp.concatenate([a, b]), ss, pad)
-            st = init_state_batch(Gp, B, N)
+            st = init_state_batch(Gp, B, N, P)
         shard = jax.tree_util.tree_map(
             lambda x: x.reshape((D, Gp // D) + x.shape[1:]), ss)
         st_sh = jax.tree_util.tree_map(
@@ -875,5 +1066,6 @@ def run_batch(pss: Sequence[PackedSim], cycles: int | None = None,
 def run(ps: PackedSim, cycles: int | None = None) -> SimState:
     """Single-point API (a batch of one; same step program as batches)."""
     cycles = cycles or ps.sim.cycles
-    st = init_state(ps.B, int(ps.ss.births.shape[0]))
+    st = init_state(ps.B, int(ps.ss.births.shape[0]),
+                    int(ps.ss.phase_need.shape[0]))
     return jax.block_until_ready(_run_one(ps.ss, st, cycles, ps.B))

@@ -1,13 +1,19 @@
 """Reference scatter/segment implementation of the flit simulator.
 
-This is the original engine, kept verbatim as a *differential-testing
-oracle* for ``simulator.py``'s scatter-free rewrite: both engines must
-produce bitwise-identical dynamics (tests/test_engine_equivalence.py
-asserts this across fabrics, media, MAC modes and system sizes).  It is
-also the baseline that ``benchmarks.simspeed`` reports speedups against.
-It is NOT used by the sweep/benchmark paths — do not extend it; extend
-``simulator.py`` and keep this file frozen unless the simulated semantics
-themselves change.
+This is the original engine, kept as a *differential-testing oracle* for
+``simulator.py``'s scatter-free rewrite: both engines must produce bitwise-
+identical dynamics (tests/test_engine_equivalence.py asserts this across
+fabrics, media, MAC modes and system sizes).  It is also the baseline that
+``benchmarks.simspeed`` reports speedups against.  It is NOT used by the
+sweep/benchmark paths — do not extend it; extend ``simulator.py`` and keep
+this file frozen unless the simulated semantics themselves change.
+
+Semantics extension (ISSUE 2): multicast delivery over the wireless medium
+and trace phase barriers were added to BOTH engines — here in the original
+scatter/segment style (segment-min arbitration + scatter installs, with the
+receiver-side fan-out threaded through an engine-internal ``mc_src``
+pointer), in ``simulator.py`` in candidate-table/gather style — so the
+differential tests pin the new paths from two independent formulations.
 
 Original module docstring follows.
 
@@ -68,7 +74,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.constants import LinkClass, MacMode, PhyParams, SimParams
+from repro.core.constants import (WMAX, LinkClass, MacMode, PhyParams,
+                                  SimParams)
 from repro.core.routing import RoutingTables
 from repro.core.topology import Topology
 from repro.core.traffic import NO_PKT, TrafficTable
@@ -76,7 +83,6 @@ from repro.core.traffic import NO_PKT, TrafficTable
 V = 8            # virtual channels per port (paper §IV)
 DEPTH = 16       # buffer depth in flits (paper §IV)
 DMAX = 12        # arrival-pipe depth >= max link latency
-WMAX = 16        # max wireless interfaces
 
 
 def _bucket(n: int, q: int) -> int:
@@ -121,6 +127,14 @@ class SimStatic(NamedTuple):
     wl_single: jnp.ndarray   # bool: strict single shared channel
     wl_rx_busy: jnp.ndarray  # bool: serialize each receiver (non-crossbar)
     sleepy: jnp.ndarray      # bool
+    # trace tables (phase barriers + multicast groups; see simulator.py)
+    phases: jnp.ndarray      # [N, K]
+    phase_need: jnp.ndarray  # [P]
+    n_phases: jnp.ndarray    # scalar int32 (0 = open-loop)
+    mc_member: jnp.ndarray   # [M, WMAX] bool
+    mc_dst: jnp.ndarray      # [M, WMAX]
+    mc_route: jnp.ndarray    # [M]
+    mc_prim: jnp.ndarray     # [M]
 
 
 class SimState(NamedTuple):
@@ -138,6 +152,10 @@ class SimState(NamedTuple):
     phase2: jnp.ndarray       # [B, V] bool: packet already crossed wireless
     rcvd: jnp.ndarray         # [B, V]
     sent: jnp.ndarray         # [B, V]
+    mc_id: jnp.ndarray        # [B, V] multicast group id (-1 = unicast)
+    mc_src: jnp.ndarray       # [B, V] engine-internal: flat sender slot
+    #                           feeding this multicast copy (-1); plays the
+    #                           role simulator.py's src_of plays for copies
     pipe: jnp.ndarray         # [B, V, DMAX]
     busy_until: jnp.ndarray   # [B]
     wl_busy_until: jnp.ndarray  # scalar: shared-channel mode
@@ -145,6 +163,11 @@ class SimState(NamedTuple):
     q_head: jnp.ndarray       # [N]
     inj_vc: jnp.ndarray       # [N]
     inj_pushed: jnp.ndarray   # [N]
+    # phase barrier (trace tables)
+    cur_phase: jnp.ndarray    # scalar
+    phase_del: jnp.ndarray    # scalar
+    phase_end: jnp.ndarray    # [P]
+    phase_flits: jnp.ndarray  # [P]
     # stats (post-warmup)
     flits_inj: jnp.ndarray
     flits_del: jnp.ndarray
@@ -154,11 +177,13 @@ class SimState(NamedTuple):
     counts_into: jnp.ndarray  # [B] link-traversal events
     count_switch: jnp.ndarray
     ctrl_count: jnp.ndarray
+    wl_tx_flits: jnp.ndarray
+    wl_rx_flits: jnp.ndarray
     awake_cycles: jnp.ndarray
     sleep_cycles: jnp.ndarray
 
 
-def init_state(B: int, N: int) -> SimState:
+def init_state(B: int, N: int, P: int = 1) -> SimState:
     i32 = jnp.int32
     zBV = jnp.zeros((B, V), i32)
     return SimState(
@@ -167,15 +192,19 @@ def init_state(B: int, N: int) -> SimState:
         out_is_wl=jnp.zeros((B, V), bool), out_is_ej=jnp.zeros((B, V), bool),
         out_vc=jnp.full((B, V), -1, i32),
         phase2=jnp.zeros((B, V), bool), rcvd=zBV, sent=zBV,
+        mc_id=jnp.full((B, V), -1, i32), mc_src=jnp.full((B, V), -1, i32),
         pipe=jnp.zeros((B, V, DMAX), i32), busy_until=jnp.zeros((B,), i32),
         wl_busy_until=jnp.int32(0),
         q_head=jnp.zeros((N,), i32), inj_vc=jnp.full((N,), -1, i32),
         inj_pushed=jnp.zeros((N,), i32),
+        cur_phase=jnp.int32(0), phase_del=jnp.int32(0),
+        phase_end=jnp.zeros((P,), i32), phase_flits=jnp.zeros((P,), i32),
         flits_inj=jnp.int32(0), flits_del=jnp.int32(0), pkts_del=jnp.int32(0),
         lat_sum=jnp.float32(0), lat_pkts=jnp.int32(0),
         counts_into=jnp.zeros((B,), i32), count_switch=jnp.int32(0),
-        ctrl_count=jnp.int32(0), awake_cycles=jnp.int32(0),
-        sleep_cycles=jnp.int32(0),
+        ctrl_count=jnp.int32(0),
+        wl_tx_flits=jnp.int32(0), wl_rx_flits=jnp.int32(0),
+        awake_cycles=jnp.int32(0), sleep_cycles=jnp.int32(0),
     )
 
 
@@ -185,17 +214,26 @@ def _route_fields(ss: SimStatic, at_switch: jnp.ndarray, dst: jnp.ndarray):
     return oo, ss.o_buf[oo], ss.o_wo[oo], ss.o_is_wl[oo], ss.o_is_ej[oo]
 
 
-def make_step(B: int, Wout: int):
+def make_step(B: int, Wout: int, RXW: int = 1):
     """Build the per-cycle transition function (shapes baked in)."""
     NC = B * V
     BIG = jnp.int32(4 * NC)
     flat2d = jnp.arange(NC, dtype=jnp.int32).reshape(B, V)
+    b_ids = jnp.arange(B, dtype=jnp.int32)
+    RXWMAX = 4
 
     def step(ss: SimStatic, st: SimState, t: jnp.ndarray) -> SimState:
         i32 = jnp.int32
         t = t.astype(i32)
         post = (t >= ss.warmup).astype(i32)
         rot = t % NC
+        S = ss.next_out.shape[0]
+        M = ss.mc_member.shape[0]
+        P = ss.phase_need.shape[0]
+        warr = jnp.arange(WMAX, dtype=i32)
+        rx_ids = jnp.clip(ss.rx0 + warr, 0, B - 1)               # [W]
+        rx_slot = jnp.clip(b_ids - ss.rx0, 0, WMAX - 1)          # [B]
+        vcol0 = jnp.arange(V, dtype=i32)[None, :]
 
         # ---- 1. arrivals -------------------------------------------------
         arrive = st.pipe[:, :, 0]
@@ -221,13 +259,34 @@ def make_step(B: int, Wout: int):
         free_ok = free_mask[ob_c0] & allowed                     # [B, V, V]
         has_free_c = free_ok.any(axis=-1)
         first_free_c = jnp.argmax(free_ok, axis=-1).astype(i32)  # [B, V]
-        need = active & (st.out_vc < 0) & ~st.out_is_ej & (occ > 0) \
-            & has_free_c & (st.out_buf < B)
-        tb = jnp.where(need, st.out_buf, B)
-        score = jnp.where(need, (flat2d - rot) % NC, BIG)
+        # multicast senders: all-or-nothing claim at every member rx buffer
+        is_mc = (st.mc_id >= 0) & st.out_is_wl & ~st.phase2 & active
+        mcid_c = jnp.clip(st.mc_id, 0, M - 1)
+        member = ss.mc_member[mcid_c]                            # [B, V, W]
+        free_any_rx = free_mask[rx_ids].any(axis=1)              # [W]
+        free_all_mc = jnp.where(member, free_any_rx[None, None, :],
+                                True).all(axis=-1)               # [B, V]
+        need_base = active & (st.out_vc < 0) & ~st.out_is_ej & (occ > 0) \
+            & (st.out_buf < B)
+        need_uni = need_base & ~is_mc & has_free_c
+        need_mc = need_base & is_mc & free_all_mc
+        score_all = (flat2d - rot) % NC
+        tb = jnp.where(need_uni, st.out_buf, B)
+        score = jnp.where(need_uni, score_all, BIG)
         segmin = jax.ops.segment_min(score.reshape(-1), tb.reshape(-1),
                                      num_segments=B + 1)
-        win = need & (score == segmin[jnp.clip(tb, 0, B)]) & (score < BIG)
+        # multicast contenders: masked min per member receiver, combined
+        # with the unicast segment minima into the per-rx-buffer winner
+        score_mc = jnp.where(need_mc, score_all, BIG)
+        mc_min = jnp.where(member & need_mc[..., None],
+                           score_mc[..., None], BIG).min(axis=(0, 1))  # [W]
+        win_code_rx = jnp.minimum(segmin[rx_ids], mc_min)        # [W]
+        comb_b = jnp.where(ss.b_is_rx, win_code_rx[rx_slot], segmin[:B])
+        win = need_uni & (score == comb_b[ob_c0]) & (score < BIG)
+        win_all_mc = jnp.where(
+            member, win_code_rx[None, None, :] == score_mc[:, :, None],
+            True).all(axis=-1)                                   # [B, V]
+        win_mc = need_mc & win_all_mc
 
         # scatter claim into downstream (b_t, v_t); OOB indices are dropped
         b_t = jnp.where(win, st.out_buf, B).reshape(-1)
@@ -249,10 +308,54 @@ def make_step(B: int, Wout: int):
         out_is_ej = claim(st.out_is_ej, d_oej)
         out_vc = claim(st.out_vc, jnp.full((B, V), -1, i32))
         phase2 = claim(st.phase2, st.phase2 | tgt_rx)
+        mc_id = claim(st.mc_id, st.mc_id)
+        mc_src = claim(st.mc_src, jnp.full((B, V), -1, i32))
         rcvd = claim(rcvd, jnp.zeros((B, V), i32))
         sent = claim(st.sent, jnp.zeros((B, V), i32))
         # upstream learns its allocated VC
         out_vc = jnp.where(win, v_t.reshape(B, V), out_vc)
+
+        # multicast copy install: receiver-side, one copy per member rx
+        # buffer of the full-group winner, each addressed to its per-WI
+        # destination from the group table
+        mcs = jnp.where(member & need_mc[..., None],
+                        score_mc[..., None], BIG)                # [B, V, W]
+        mc_src_w = jnp.argmin(mcs.reshape(NC, WMAX), axis=0).astype(i32)
+        grp_ok_w = win_all_mc.reshape(-1)[mc_src_w]              # [W]
+        inst_w = (mc_min < BIG) & (mc_min < segmin[rx_ids]) & grp_ok_w
+        vfree_w = jnp.argmax(free_mask[rx_ids], axis=1).astype(i32)  # [W]
+        inst_b = ss.b_is_rx & inst_w[rx_slot]                    # [B]
+        icl_mc = inst_b[:, None] & (vfree_w[rx_slot][:, None] == vcol0)
+        sw_b = mc_src_w[rx_slot]                                 # [B]
+
+        def gmc(a):
+            return a.reshape(-1)[sw_b]                           # [B]
+
+        copy_dst = jnp.clip(
+            ss.mc_dst[jnp.clip(gmc(st.mc_id), 0, M - 1), rx_slot], 0, S - 1)
+        c_oo, c_ob, c_owo, c_owl, c_oej = _route_fields(
+            ss, ss.b_dst, copy_dst)
+
+        def mupd(old, val_b):
+            return jnp.where(icl_mc, val_b[:, None], old)
+
+        pkt_src = mupd(pkt_src, gmc(st.pkt_src))
+        pkt_idx = mupd(pkt_idx, gmc(st.pkt_idx))
+        pkt_dst = mupd(pkt_dst, copy_dst)
+        born = mupd(born, gmc(st.born))
+        out_o = mupd(out_o, c_oo.astype(i32))
+        out_buf = mupd(out_buf, c_ob.astype(i32))
+        out_wo = mupd(out_wo, c_owo.astype(i32))
+        out_is_wl = jnp.where(icl_mc, c_owl[:, None], out_is_wl)
+        out_is_ej = jnp.where(icl_mc, c_oej[:, None], out_is_ej)
+        out_vc = jnp.where(icl_mc, -1, out_vc)
+        phase2 = jnp.where(icl_mc, True, phase2)
+        mc_id = mupd(mc_id, gmc(st.mc_id))
+        mc_src = mupd(mc_src, sw_b)
+        rcvd = jnp.where(icl_mc, 0, rcvd)
+        sent = jnp.where(icl_mc, 0, sent)
+        # multicast sender: "granted" sentinel (delivery is receiver-side)
+        out_vc = jnp.where(win_mc, 0, out_vc)
 
         active = pkt_src >= 0
         occ = jnp.where(active, rcvd - sent, 0)
@@ -264,6 +367,28 @@ def make_step(B: int, Wout: int):
         occ_down = rcvd[ob_c, ovc_c] - sent[ob_c, ovc_c]
         space = ss.b_depth[ob_c] - occ_down - inflight[ob_c, ovc_c]
         link_free = jnp.take(st.busy_until, ob_c) <= t
+        # multicast sender: backpressure is the MIN over its member copies
+        # (located via the engine-internal mc_src pointer on the rx region)
+        is_mc2 = (mc_id >= 0) & out_is_wl & ~phase2 & active     # [B, V]
+        mcid_c2 = jnp.clip(mc_id, 0, M - 1)
+        member2 = ss.mc_member[mcid_c2]                          # [B, V, W]
+        mcs_rx = mc_src[rx_ids]                                  # [W, V]
+        occ_rx = occ[rx_ids]
+        infl_rx = inflight[rx_ids]
+        depth_rx = ss.b_depth[rx_ids]                            # [W]
+        cp = mcs_rx[None, None, :, :] \
+            == flat2d[:, :, None, None]                          # [B,V,W,V]
+        BIGS = jnp.int32(1 << 30)
+        cp_space = jnp.where(
+            cp, (depth_rx[:, None] - occ_rx - infl_rx)[None, None],
+            BIGS).min(axis=-1)                                   # [B, V, W]
+        cp_space = jnp.where(cp.any(axis=-1), cp_space, 0)
+        space_mc = jnp.where(member2, cp_space, BIGS).min(axis=-1)
+        space = jnp.where(is_mc2, space_mc, space)
+        busy_rx_ok = jnp.take(st.busy_until, rx_ids) <= t        # [W]
+        lf_mc = jnp.where(member2, busy_rx_ok[None, None, :],
+                          True).all(axis=-1)
+        link_free = jnp.where(is_mc2, lf_mc, link_free)
         # token MAC: wireless transmission only once the whole packet is here
         whole = rcvd >= ss.pkt_len
         wl_ok = ~out_is_wl | ~ss.mac_token | whole
@@ -280,11 +405,37 @@ def make_step(B: int, Wout: int):
         wo_base = jnp.where(out_is_ej,
                             out_wo + (vcol % ss.b_ej_ways[:, None]) * ss.s_pad,
                             out_wo)
-        wo = jnp.where(elig, wo_base, Wout)
-        score2 = jnp.where(elig, (flat2d - rot) % NC, BIG)
+        wo = jnp.where(elig & ~is_mc2, wo_base, Wout)
+        score2_all = (flat2d - rot) % NC
+        score2 = jnp.where(elig, score2_all, BIG)
         segmin2 = jax.ops.segment_min(score2.reshape(-1), wo.reshape(-1),
                                       num_segments=Wout + 1)
-        fwd = elig & (score2 == segmin2[jnp.clip(wo, 0, Wout)]) & (score2 < BIG)
+        # multicast air winners: masked min per (sub-channel, receiver),
+        # combined with the unicast slot minima; a multicast flies only if
+        # it is the winner at EVERY member receiver
+        rarr = jnp.arange(RXWMAX, dtype=i32)
+        r_b = jnp.broadcast_to(ss.b_wi[:, None] % RXW, (B, V))   # [B, V]
+        r_bc = jnp.clip(r_b, 0, RXWMAX - 1)
+        mc_sc = jnp.where(is_mc2 & elig, score2_all, BIG)        # [B, V]
+        mask4 = member2[None] & (r_bc[None, :, :, None]
+                                 == rarr[:, None, None, None])   # [R,B,V,W]
+        mc_min2 = jnp.where(mask4, mc_sc[None, :, :, None],
+                            BIG).min(axis=(1, 2))                # [RXW, W]
+        # every wireless sender's receiver slot id, reconstructed from its
+        # own out_wo (slot = base + dst_wi*RXW + r): anchor = out_buf - rx0
+        anchor = jnp.clip(out_buf - ss.rx0, 0, WMAX - 1)         # [B, V]
+        slot_w = out_wo[:, :, None] \
+            + (warr[None, None, :] - anchor[:, :, None]) * RXW   # [B, V, W]
+        comb_w = jnp.minimum(
+            segmin2[jnp.clip(slot_w, 0, Wout)],
+            mc_min2[r_bc[:, :, None], warr[None, None, :]])      # [B, V, W]
+        wl_all2 = jnp.where(member2, comb_w == score2_all[:, :, None],
+                            True).all(axis=-1)                   # [B, V]
+        mc_at_mine = mc_min2[r_bc, anchor]                       # [B, V]
+        fwd_uni = elig & ~is_mc2 \
+            & (score2 == segmin2[jnp.clip(wo, 0, Wout)]) & (score2 < BIG) \
+            & (~out_is_wl | (score2 < mc_at_mine))
+        fwd = fwd_uni | (elig & is_mc2 & wl_all2)
 
         # wireless sender-side cap: one flit per transmitting WI per cycle
         # (and one WI total in single-channel mode); no-op for the crossbar
@@ -313,29 +464,70 @@ def make_step(B: int, Wout: int):
             lat_ok, (t - born + 1).astype(jnp.float32), 0.0).sum()
         lat_pkts = st.lat_pkts + post * lat_ok.sum().astype(i32)
 
+        # ---- phase barrier bookkeeping (trace tables; raw counts)
+        Nn, Kk = ss.phases.shape
+        phv = ss.phases[jnp.clip(pkt_src, 0, Nn - 1),
+                        jnp.clip(pkt_idx, 0, Kk - 1)]            # [B, V]
+        phase_del = st.phase_del \
+            + (tail_ej & (phv == st.cur_phase)).sum().astype(i32)
+        parr = jnp.arange(P, dtype=i32)
+        phase_flits = st.phase_flits + jnp.where(
+            parr == st.cur_phase, ej.sum().astype(i32), 0)
+        in_trace = (ss.n_phases > 0) & (st.cur_phase < ss.n_phases)
+        needed = ss.phase_need[jnp.clip(st.cur_phase, 0, P - 1)]
+        complete = in_trace & (phase_del >= needed)
+        phase_end = jnp.where((parr == st.cur_phase) & complete,
+                              t + 1, st.phase_end)
+        cur_phase = st.cur_phase + complete.astype(i32)
+        phase_del = jnp.where(complete, 0, phase_del)
+
         # non-eject: schedule arrival downstream, occupy link / rx / channel
         first_wl = is_wl_fwd & (sent == 1)   # header burst => control packet
         lat_t = jnp.where(out_is_wl, ss.lat_wl, ss.b_lat[ob_c]) \
             + jnp.where(first_wl & ~ss.wl_rx_busy, ss.ctrl_cycles, 0)
         serv_t = jnp.where(out_is_wl, ss.serv_wl, ss.b_serv[ob_c]) \
             + jnp.where(first_wl, ss.ctrl_cycles, 0)
-        nb_t = jnp.where(nej, out_buf, B).reshape(-1)
+        nb_t = jnp.where(nej & ~is_mc2, out_buf, B).reshape(-1)
         nv_t = ovc_c.reshape(-1)
         nd_t = jnp.clip(lat_t - 1, 0, DMAX - 1).reshape(-1)
         pipe = pipe.at[nb_t, nv_t, nd_t].add(1, mode="drop")
+        # multicast fan-out: receiver-side — every member copy of a
+        # transmitting group receives the flit (one air occupancy, D pipes)
+        svm = jnp.clip(mc_src, 0, NC - 1)
+        is_mc2_f = is_mc2.reshape(-1)
+        ident_mc = (mc_src >= 0) & is_mc2_f[svm] & ss.b_is_rx[:, None] \
+            & (mc_id >= 0) & (mc_id.reshape(-1)[svm] == mc_id)
+        inc_mc = ident_mc & fwd.reshape(-1)[svm]                 # [B, V]
+        d_in_mc = jnp.clip(lat_t.reshape(-1)[svm] - 1, 0, DMAX - 1)
+        pipe = pipe + (inc_mc[:, :, None]
+                       & (jnp.arange(DMAX) == d_in_mc[:, :, None])).astype(i32)
         # crossbar: wireless winners do not serialize the receiver
-        bu_t = jnp.where(nej & (~out_is_wl | ss.wl_rx_busy), out_buf,
-                         B).reshape(-1)
+        bu_t = jnp.where(nej & ~is_mc2 & (~out_is_wl | ss.wl_rx_busy),
+                         out_buf, B).reshape(-1)
         busy_until = st.busy_until.at[bu_t].set(
             (t + serv_t).reshape(-1), mode="drop")
+        ser_mc = inc_mc & ss.wl_rx_busy
+        serv_mc = serv_t.reshape(-1)[svm]
+        busy_until = jnp.where(
+            ser_mc.any(axis=1),
+            t + jnp.where(ser_mc, serv_mc, 0).sum(axis=1), busy_until)
         wl_busy_until = jnp.where(
             is_wl_fwd.any(),
             t + (jnp.where(is_wl_fwd, serv_t, 0)).max(), st.wl_busy_until)
-        counts_into = st.counts_into.at[jnp.where(nej & (post > 0), out_buf,
-                                                  B).reshape(-1)].add(
-            1, mode="drop")
+        counts_into = st.counts_into.at[
+            jnp.where(nej & ~is_mc2 & (post > 0), out_buf,
+                      B).reshape(-1)].add(1, mode="drop")
+        # broadcast energy is paid once: count only the primary member copy
+        prim_buf = ss.rx0 + ss.mc_prim[mcid_c2]                  # [B, V]
+        counts_into = counts_into + post * (
+            inc_mc & (b_ids[:, None] == prim_buf)).sum(axis=1).astype(i32)
         count_switch = st.count_switch + post * fwd.sum().astype(i32)
         ctrl_count = st.ctrl_count + post * first_wl.sum().astype(i32)
+        wl_tx_flits = st.wl_tx_flits + post * is_wl_fwd.sum().astype(i32)
+        wl_rx_flits = st.wl_rx_flits + post * (
+            (nej & ~is_mc2 & out_is_wl).sum() + inc_mc.sum()).astype(i32)
+        # the feeding group's tail has been sent: detach the copies
+        mc_src = jnp.where(ident_mc & tail.reshape(-1)[svm], -1, mc_src)
 
         # free VCs whose tail left
         pkt_src = jnp.where(tail, -1, pkt_src)
@@ -353,8 +545,15 @@ def make_step(B: int, Wout: int):
         ifree = (pkt_src[ib] < 0) & classA[None, :]             # [N, V]
         ihas = ifree.any(axis=1)
         ivc = jnp.argmax(ifree, axis=1).astype(i32)
-        can_new = (st.inj_vc < 0) & (st.q_head < K) & (birth_n <= t) & ihas
-        dst_n = ss.dests[n_ar, qh]
+        # phase gate: a packet injects only once its phase is open
+        ph_ok = (ss.n_phases == 0) | (ss.phases[n_ar, qh] <= cur_phase)
+        can_new = (st.inj_vc < 0) & (st.q_head < K) & (birth_n <= t) \
+            & ihas & ph_ok
+        # multicast slots: dests = -(1 + m); route to the group's anchor
+        dst_raw = ss.dests[n_ar, qh]
+        mcv_n = jnp.where(dst_raw < 0, -(dst_raw + 1), -1)      # [N]
+        dst_n = jnp.where(
+            dst_raw < 0, ss.mc_route[jnp.clip(mcv_n, 0, M - 1)], dst_raw)
         r_oo, r_ob, r_owo, r_owl, r_oej = _route_fields(
             ss, ss.src_switch, dst_n)
 
@@ -374,6 +573,8 @@ def make_step(B: int, Wout: int):
         out_is_ej = iclaim(out_is_ej, r_oej)
         out_vc = iclaim(out_vc, jnp.full((N,), -1, i32))
         phase2 = iclaim(phase2, jnp.zeros((N,), bool))
+        mc_id = iclaim(mc_id, mcv_n)
+        mc_src = iclaim(mc_src, jnp.full((N,), -1, i32))
         rcvd = iclaim(rcvd, jnp.zeros((N,), i32))
         sent = iclaim(sent, jnp.zeros((N,), i32))
         inj_vc = jnp.where(can_new, ivc, st.inj_vc)
@@ -405,22 +606,25 @@ def make_step(B: int, Wout: int):
             pkt_src=pkt_src, pkt_idx=pkt_idx, pkt_dst=pkt_dst, born=born,
             out_o=out_o, out_buf=out_buf, out_wo=out_wo, out_is_wl=out_is_wl,
             out_is_ej=out_is_ej, out_vc=out_vc, phase2=phase2,
-            rcvd=rcvd, sent=sent,
+            rcvd=rcvd, sent=sent, mc_id=mc_id, mc_src=mc_src,
             pipe=pipe, busy_until=busy_until, wl_busy_until=wl_busy_until,
             q_head=q_head, inj_vc=inj_vc, inj_pushed=inj_pushed,
+            cur_phase=cur_phase, phase_del=phase_del, phase_end=phase_end,
+            phase_flits=phase_flits,
             flits_inj=flits_inj, flits_del=flits_del, pkts_del=pkts_del,
             lat_sum=lat_sum, lat_pkts=lat_pkts, counts_into=counts_into,
             count_switch=count_switch, ctrl_count=ctrl_count,
+            wl_tx_flits=wl_tx_flits, wl_rx_flits=wl_rx_flits,
             awake_cycles=awake_cycles, sleep_cycles=sleep_cycles,
         )
 
     return step
 
 
-@functools.partial(jax.jit, static_argnums=(2, 3, 4))
+@functools.partial(jax.jit, static_argnums=(2, 3, 4, 5))
 def _run(ss: SimStatic, st: SimState, cycles: int, B: int,
-         Wout: int) -> SimState:
-    step = make_step(B, Wout)
+         Wout: int, RXW: int = 1) -> SimState:
+    step = make_step(B, Wout, RXW)
 
     def body(carry, t):
         return step(ss, carry, t), None
@@ -445,6 +649,7 @@ class PackedSim:
     rt: RoutingTables
     phy: PhyParams
     sim: SimParams
+    RXW: int = 1
 
 
 def pack(topo: Topology, rt: RoutingTables, tt: TrafficTable,
@@ -561,6 +766,26 @@ def pack(topo: Topology, rt: RoutingTables, tt: TrafficTable,
     dests = np.zeros((N, K), np.int32)
     dests[:, :tt.k] = tt.dests
 
+    # trace tables (phase barriers + multicast groups)
+    Pn = getattr(tt, "n_phases", 0)
+    Mn = getattr(tt, "n_mc", 0)
+    P = _bucket(Pn, 8)
+    M = _bucket(Mn, 8)
+    phases = np.zeros((N, K), np.int32)
+    phase_need = np.zeros(P, np.int32)
+    mc_member = np.zeros((M, WMAX), bool)
+    mc_dst = np.zeros((M, WMAX), np.int32)
+    mc_route = np.zeros(M, np.int32)
+    mc_prim = np.zeros(M, np.int32)
+    if Pn:
+        phases[:, :tt.k] = tt.phases
+        phase_need[:Pn] = tt.phase_need
+    if Mn:
+        mc_member[:Mn] = tt.mc_member
+        mc_dst[:Mn] = np.clip(tt.mc_dst, 0, None)
+        mc_route[:Mn] = tt.mc_route
+        mc_prim[:Mn] = np.argmax(tt.mc_member, axis=1)
+
     ctrl_cycles = max(1, phy.ctrl_packet_flits * serv_wl)
 
     ss = SimStatic(
@@ -585,13 +810,19 @@ def pack(topo: Topology, rt: RoutingTables, tt: TrafficTable,
         wl_single=jnp.asarray(medium == "single"),
         wl_rx_busy=jnp.asarray(medium != "crossbar"),
         sleepy=jnp.asarray(bool(sim.sleepy_rx)),
+        phases=jnp.asarray(phases), phase_need=jnp.asarray(phase_need),
+        n_phases=jnp.int32(Pn),
+        mc_member=jnp.asarray(mc_member), mc_dst=jnp.asarray(mc_dst),
+        mc_route=jnp.asarray(mc_route), mc_prim=jnp.asarray(mc_prim),
     )
     return PackedSim(ss=ss, B=B, Wout=Wout, n_cores=topo.n_cores, Lw=Lw,
-                     n_inj=n_inj, topo=topo, rt=rt, phy=phy, sim=sim)
+                     n_inj=n_inj, topo=topo, rt=rt, phy=phy, sim=sim,
+                     RXW=RXW)
 
 
 def run(ps: PackedSim, cycles: int | None = None) -> SimState:
     cycles = cycles or ps.sim.cycles
-    st = init_state(ps.B, ps.ss.births.shape[0])
+    st = init_state(ps.B, ps.ss.births.shape[0],
+                    int(ps.ss.phase_need.shape[0]))
     return jax.block_until_ready(
-        _run(ps.ss, st, cycles, ps.B, ps.Wout))
+        _run(ps.ss, st, cycles, ps.B, ps.Wout, ps.RXW))

@@ -18,7 +18,10 @@ they have the same number of traffic sources N (padded shapes [N, K] only
 harmonize over K) and the same simulated cycle count (the scan length is a
 static compile parameter; warm-up is traced and may differ).  Everything
 else — fabric, topology, loads, seeds, PHY values, MAC mode, medium — is
-traced data and batches freely.
+traced data and batches freely.  Trace points (``SweepPoint(trace=...)``,
+see ``workloads``) follow the same rules: one trace emitted on the three
+fabrics keeps N constant by construction, so a whole trace-figure row is
+one launch; multicast-group and phase dims (M, P) harmonize like the rest.
 """
 from __future__ import annotations
 
@@ -32,7 +35,7 @@ from repro.core.metrics import Metrics, compute_metrics_batch
 from repro.core.routing import compute_routing
 from repro.core.topology import Topology, build_xcym
 
-HARMONIZED_DIMS = ("B", "S", "R", "K", "CS", "CR")
+HARMONIZED_DIMS = ("B", "S", "R", "K", "CS", "CR", "M", "P")
 
 
 @functools.lru_cache(maxsize=64)
@@ -45,16 +48,23 @@ def _cached_system(n_chips: int, n_mem: int, fabric: Fabric, phy: PhyParams,
 
 @dataclasses.dataclass(frozen=True)
 class SweepPoint:
-    """One evaluation point of a figure grid (run_point's argument list)."""
+    """One evaluation point of a figure grid (run_point's argument list).
+
+    ``trace`` switches the point from synthetic open-loop traffic to a
+    phase-barrier ML workload trace (``workloads.Trace``), lowered
+    fabric-aware by ``traffic.from_trace``; ``load``/``p_mem``/``app``
+    are ignored for trace points.
+    """
 
     n_chips: int
     n_mem: int
     fabric: Fabric
-    load: float
+    load: float = 0.0
     p_mem: float = 0.2
     phy: PhyParams = DEFAULT_PHY
     sim: SimParams = dataclasses.field(default_factory=SimParams)
     app: str | None = None
+    trace: object | None = None
     wireless_weight: float = 3.0
     name: str | None = None
 
@@ -63,6 +73,11 @@ def _build_point(p: SweepPoint):
     """Host-side construction: topology, routing, traffic table, label."""
     topo, rt = _cached_system(p.n_chips, p.n_mem, p.fabric, p.phy,
                               p.wireless_weight)
+    if p.trace is not None:
+        tt = traffic.from_trace(topo, p.trace, p.phy.pkt_flits,
+                                p.phy.flit_bits)
+        label = p.name or f"{topo.name}/{p.trace.name}"
+        return topo, rt, tt, label
     if p.app is None:
         tt = traffic.uniform_random(topo, p.load, p.p_mem, p.sim.cycles,
                                     p.phy.pkt_flits, seed=p.sim.seed)

@@ -62,6 +62,28 @@ class Topology:
         for w, s in enumerate(self.wi_switch):
             self.wi_of_switch[s] = w
 
+    def serving_wi(self) -> np.ndarray:
+        """[S] WI id serving each switch: the nearest same-chip WI (-1 if
+        the fabric has none).
+
+        This is the cluster structure the paper's WI placement implies
+        ([15]: one WI per near-square core cluster, plus one per memory
+        stack) recovered geometrically, used by the workload subsystem to
+        lower multicast destinations onto receiver WIs.
+        """
+        out = np.full(self.n_switches, -1, np.int32)
+        if not self.n_wi:
+            return out
+        wi_chip = self.chip_of[self.wi_switch]          # [W]
+        wi_pos = self.pos_mm[self.wi_switch]            # [W, 2]
+        for s in range(self.n_switches):
+            same = np.nonzero(wi_chip == self.chip_of[s])[0]
+            if len(same) == 0:
+                continue
+            d = np.abs(wi_pos[same] - self.pos_mm[s]).sum(axis=1)
+            out[s] = same[int(np.argmin(d))]            # lowest id on ties
+        return out
+
     @property
     def n_cores(self) -> int:
         return int(self.is_core.sum())

@@ -1,4 +1,4 @@
-"""Traffic generation (paper §IV.B-D).
+"""Traffic generation (paper §IV.B-D) and trace emission.
 
 All traffic is pre-generated on the host as per-source packet tables
 (birth cycle + destination switch), which keeps the cycle-accurate simulator
@@ -11,6 +11,27 @@ free of dynamic allocation:
 - ``application``: SynFull-style [20] two-state Markov-modulated processes
   (steady/burst) with per-benchmark memory intensity and hotspot skew,
   standing in for the PARSEC/SPLASH2 traces of §IV.D (DESIGN.md §7.2).
+- ``from_trace``: fabric-aware lowering of a ``workloads.Trace`` (phase-
+  structured ML collective schedules) into a phase-gated table.  Phases
+  become dependency barriers enforced by the simulator; multicast messages
+  become *one* shared-medium transmission on wireless fabrics (receiver-set
+  delivery, the paper's broadcast advantage) and replicated unicasts on
+  wireline.  See the "Trace tables" section below for the encoding.
+
+Trace tables
+------------
+A trace-emitted ``TrafficTable`` carries four optional extensions:
+
+- ``phases[n, k]``: the phase id of each packet; the simulator injects a
+  packet only once its phase is open (all packets of earlier phases
+  ejected).  ``phase_need[p]`` is the ejection count that closes phase p.
+- multicast groups: ``dests[n, k] = -(1 + m)`` marks packet slots that are
+  multicasts of group ``m``.  ``mc_member[m, w]`` is the receiver-WI set,
+  ``mc_dst[m, w]`` the final destination switch of the copy delivered at
+  WI ``w`` (one representative per receiver cluster; additional same-
+  cluster destinations are relayed by the representative in an emitted
+  local fan-out phase), and ``mc_route[m]`` the pre-air routing anchor
+  (switch of the lowest member WI).
 """
 from __future__ import annotations
 
@@ -19,6 +40,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core.constants import WMAX as MC_WMAX   # multicast mask width
 from repro.core.topology import Topology
 
 
@@ -52,12 +74,24 @@ APP_MODELS = {
 
 @dataclasses.dataclass
 class TrafficTable:
-    """Pre-generated packets: per source, K slots ordered by birth."""
+    """Pre-generated packets: per source, K slots ordered by birth.
+
+    The four optional trailing fields are the trace-table extensions
+    (phase barriers + multicast groups) documented in the module
+    docstring; they are ``None`` for the synthetic generators.
+    """
 
     src_switch: np.ndarray   # [N_src] switch id of each source core
     births: np.ndarray       # [N_src, K] cycle (INT32_MAX = no packet)
-    dests: np.ndarray        # [N_src, K] destination switch
+    dests: np.ndarray        # [N_src, K] destination switch, or -(1+m)
     offered_load: float      # flits/cycle/core actually offered
+    # trace extensions (phase barriers + multicast groups)
+    phases: Optional[np.ndarray] = None      # [N_src, K] phase id
+    phase_need: Optional[np.ndarray] = None  # [P] ejections closing phase p
+    mc_member: Optional[np.ndarray] = None   # [M, WMAX] bool receiver WIs
+    mc_dst: Optional[np.ndarray] = None      # [M, WMAX] copy dst switch
+    mc_route: Optional[np.ndarray] = None    # [M] pre-air routing anchor
+    phase_labels: Optional[list] = None      # [P] collective label per phase
 
     @property
     def n_sources(self) -> int:
@@ -67,17 +101,37 @@ class TrafficTable:
     def k(self) -> int:
         return self.births.shape[1]
 
+    @property
+    def n_phases(self) -> int:
+        return 0 if self.phase_need is None else len(self.phase_need)
+
+    @property
+    def n_mc(self) -> int:
+        return 0 if self.mc_member is None else len(self.mc_member)
+
 
 NO_PKT = np.int32(2**31 - 1)
 
 
 def _pack_arrivals(arr: np.ndarray, k: int) -> np.ndarray:
-    """[N, C] bool -> [N, k] first-k arrival cycles (NO_PKT padded)."""
+    """[N, C] bool -> [N, k] first-k arrival cycles (NO_PKT padded).
+
+    One vectorized pass: ``np.nonzero`` on the 2-D mask walks row-major, so
+    each row's hits come out in ascending cycle order already; the rank of
+    a hit within its row is its global position minus the row's cumulative
+    start.  (The per-row Python loop this replaces dominated host-side
+    setup for long-cycle traces.)
+    """
     n, c = arr.shape
     births = np.full((n, k), NO_PKT, np.int32)
-    for i in range(n):
-        t = np.nonzero(arr[i])[0][:k]
-        births[i, : len(t)] = t
+    rows, cols = np.nonzero(arr)
+    if len(rows) == 0:
+        return births
+    counts = np.bincount(rows, minlength=n)
+    starts = np.concatenate(([0], np.cumsum(counts)[:-1]))
+    rank = np.arange(len(rows)) - starts[rows]
+    keep = rank < k
+    births[rows[keep], rank[keep]] = cols[keep]
     return births
 
 
@@ -118,6 +172,131 @@ def uniform_random(topo: Topology, load: float, p_mem: float, cycles: int,
     births = _pack_arrivals(arr, k)
     dests = _sample_dests(rng, topo, n, k, p_mem)
     return TrafficTable(core_sw, births, dests, offered_load=p_pkt * pkt_flits)
+
+
+def from_trace(topo: Topology, trace, pkt_flits: int, flit_bits: int = 32,
+               bytes_scale: float = 1.0) -> TrafficTable:
+    """Lower a ``workloads.Trace`` onto ``topo`` as a phase-gated table.
+
+    Fabric-aware multicast lowering (the tentpole semantics):
+
+    - wireline fabrics (no WIs): a multicast to D nodes is D replicated
+      unicast packet streams — every copy pays its full wire path;
+    - wireless fabric: destinations on the sender's own chip stay local
+      mesh unicasts; remote destinations are grouped by *serving WI*
+      (``Topology.serving_wi``) into one multicast group — the packet
+      crosses the shared medium once and is delivered to every member WI's
+      rx buffer.  Each member delivers to one representative destination
+      switch; further same-cluster destinations are relayed by the
+      representative in an appended ``<label>/fanout`` phase (local mesh
+      traffic on every fabric, so the comparison stays fair).
+
+    Sources are all logical devices followed by all memory stacks, in that
+    order, regardless of whether they send — keeping N identical across
+    the three fabrics so one trace's three points share a sweep batch.
+    """
+    from repro.workloads.mapping import DeviceMap
+    from repro.workloads.trace import is_mem_node, mem_stack
+
+    dm = DeviceMap(topo, trace.n_devices)
+    n_dev = trace.n_devices
+    src_switch = np.concatenate(
+        [dm.dev_switch, dm.mem_switch]).astype(np.int32)
+
+    def src_index(node: int) -> int:
+        return n_dev + mem_stack(node) if is_mem_node(node) else node
+
+    assert topo.n_wi <= MC_WMAX
+    pkt_bytes = pkt_flits * flit_bits / 8
+    use_wl = topo.n_wi > 0
+    serving = dm.serving_wi
+    per_src: list[list] = [[] for _ in range(len(src_switch))]
+    phase_need: list[int] = []
+    phase_labels: list[str] = []
+    mc_key_to_id: dict = {}
+    mc_groups: list[tuple] = []     # (members, {wi: dst_switch})
+
+    def emit(si: int, pid: int, dest: int, npk: int) -> None:
+        per_src[si].extend([(pid, dest)] * npk)
+
+    for ph in trace.phases:
+        pid = len(phase_need)
+        need = 0
+        relays: list[tuple] = []
+        for msg in ph.messages:
+            npk = max(1, int(np.ceil(msg.bytes_ * bytes_scale / pkt_bytes)))
+            si = src_index(msg.src)
+            s_chip = topo.chip_of[dm.node_switch(msg.src)]
+            remote = []
+            for d in msg.dsts:
+                if use_wl and len(msg.dsts) > 1 \
+                        and topo.chip_of[dm.node_switch(d)] != s_chip:
+                    remote.append(d)
+                else:
+                    emit(si, pid, dm.node_switch(d), npk)
+                    need += npk
+            if len(remote) == 1:
+                emit(si, pid, dm.node_switch(remote[0]), npk)
+                need += npk
+            elif remote:
+                wi_map: dict[int, list] = {}
+                for d in remote:
+                    w = int(serving[dm.node_switch(d)])
+                    assert w >= 0, "remote multicast dst without serving WI"
+                    wi_map.setdefault(w, []).append(d)
+                members = tuple(sorted(wi_map))
+                reps = {w: dm.node_switch(wi_map[w][0]) for w in members}
+                key = (members, tuple(reps[w] for w in members))
+                m = mc_key_to_id.get(key)
+                if m is None:
+                    m = mc_key_to_id[key] = len(mc_groups)
+                    mc_groups.append((members, reps))
+                emit(si, pid, -(1 + m), npk)
+                need += npk * len(members)
+                for w in members:
+                    for d in wi_map[w][1:]:
+                        relays.append((wi_map[w][0], d, npk))
+        phase_need.append(need)
+        phase_labels.append(ph.label)
+        if relays:
+            pid2 = len(phase_need)
+            need2 = 0
+            for rep, d, npk in relays:
+                emit(src_index(rep), pid2, dm.node_switch(d), npk)
+                need2 += npk
+            phase_need.append(need2)
+            phase_labels.append(ph.label + "/fanout")
+
+    n_src = len(src_switch)
+    K = max(1, max((len(s) for s in per_src), default=1))
+    births = np.full((n_src, K), NO_PKT, np.int32)
+    dests = np.zeros((n_src, K), np.int32)
+    phases = np.zeros((n_src, K), np.int32)
+    for i, slots in enumerate(per_src):
+        if not slots:
+            continue
+        births[i, :len(slots)] = 0      # injection is phase-gated, not timed
+        phases[i, :len(slots)] = [p for p, _ in slots]
+        dests[i, :len(slots)] = [d for _, d in slots]
+
+    M = len(mc_groups)
+    mc_member = np.zeros((max(M, 1), MC_WMAX), bool)
+    mc_dst = np.full((max(M, 1), MC_WMAX), -1, np.int32)
+    mc_route = np.zeros(max(M, 1), np.int32)
+    for m, (members, reps) in enumerate(mc_groups):
+        for w in members:
+            mc_member[m, w] = True
+            mc_dst[m, w] = reps[w]
+        mc_route[m] = topo.wi_switch[members[0]]
+
+    return TrafficTable(
+        src_switch=src_switch, births=births, dests=dests,
+        offered_load=0.0,
+        phases=phases, phase_need=np.asarray(phase_need, np.int32),
+        mc_member=mc_member if M else None,
+        mc_dst=mc_dst if M else None,
+        mc_route=mc_route if M else None,
+        phase_labels=phase_labels)
 
 
 def application(topo: Topology, model: AppTrafficModel, cycles: int,

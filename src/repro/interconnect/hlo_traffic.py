@@ -74,6 +74,116 @@ def _group_size(line: str, default: int) -> int:
     return default
 
 
+def _group_stride(line: str) -> int:
+    """Rank stride of explicit replica groups (1 for contiguous/iota)."""
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        ids = [int(x) for x in m.group(1).split(",") if x]
+        if len(ids) >= 2 and ids[1] > ids[0]:
+            return ids[1] - ids[0]
+    return 1
+
+
+def _match_collective(rhs: str, out_b: int, n_devices: int):
+    """(op, in_bytes, wire_bytes, group) if rhs is a collective, else None.
+
+    ``wire_bytes`` is the per-device ring-algorithm cost of the module
+    docstring; ``in_bytes`` the raw operand payload (what a schedule
+    expander distributes — see ``workloads.schedules``).
+    """
+    for op in _COLL_OPS:
+        if re.search(rf"\b{op}(-start)?\(", rhs) and "-done" not in rhs:
+            g = _group_size(rhs, n_devices)
+            if g <= 1:
+                return None
+            in_b = _all_shape_bytes(rhs.split("(", 1)[1])
+            frac = (g - 1) / g
+            if op == "all-reduce":
+                b = 2 * in_b * frac
+            elif op == "all-gather":
+                b = max(out_b, in_b) * frac
+            elif op == "reduce-scatter":
+                b = in_b * frac
+            elif op == "all-to-all":
+                b = in_b * frac
+            else:
+                b = in_b
+            return op, in_b, b, g
+    return None
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveCall:
+    """One collective in compiled execution order (trip-count expanded).
+
+    ``stride`` describes the group's device layout: 1 = contiguous ranks
+    (tensor-parallel groups, intra-chip under block device mapping);
+    ``stride = s`` groups ranks ``{r, r+s, r+2s, ...}`` (data-parallel
+    groups spanning chips — the cross-fabric traffic class).
+    """
+
+    op: str
+    payload_bytes: float    # per-device payload the schedule distributes
+    group_size: int
+    repeat: int = 1         # surrounding while-loop trip multiplier
+    stride: int = 1         # rank stride of the group members
+
+
+def collective_sequence(hlo: str, n_devices: int) -> list[CollectiveCall]:
+    """Collectives of the entry computation in program order.
+
+    Walks the call graph depth-first in instruction order (while bodies
+    multiply ``repeat`` by the recovered trip count) — the execution-ordered
+    counterpart of :func:`analyze_hlo`'s aggregate byte totals, consumed by
+    ``workloads.hlo.trace_from_hlo`` to build dependency-ordered traffic
+    phases.  Payload for all-gather is the gathered output; for the other
+    ops the operand bytes.
+    """
+    comps = _parse_computations(hlo)
+    trip: dict[str, int] = {}
+    for name, lines in comps.items():
+        for line in lines:
+            if not re.search(r"while\(", line):
+                continue
+            bm = re.search(r"body=\{?%?([\w\.\-]+)", line)
+            cm = re.search(r"condition=\{?%?([\w\.\-]+)", line)
+            if bm:
+                t = _trip_count(comps.get(cm.group(1), [])) if cm else 1
+                trip[bm.group(1)] = max(trip.get(bm.group(1), 1), t)
+
+    out: list[CollectiveCall] = []
+
+    def walk(name: str, mult: int, stack: tuple) -> None:
+        if name not in comps or name in stack:
+            return
+        for line in comps[name]:
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            rhs = m.group(2)
+            fs = _first_shape(rhs)
+            out_b = fs[0] if fs else 0
+            mc = _match_collective(rhs, out_b, n_devices)
+            if mc is not None:
+                op, in_b, _wire, g = mc
+                payload = out_b if op == "all-gather" else in_b
+                out.append(CollectiveCall(op, float(payload), g, mult,
+                                          stride=_group_stride(rhs)))
+                continue
+            for c in _CALLED_RE.findall(line):
+                # classify body BEFORE condition: both substrings appear on
+                # a while line and the body name trails the condition's
+                if "body=" in line and c in line.split("body=")[1]:
+                    walk(c, mult * trip.get(c, 1), stack + (name,))
+                    continue
+                if "condition=" in line and c in line.split("condition=")[1]:
+                    continue                    # trip counting only
+                walk(c, mult, stack + (name,))
+
+    walk(_entry_name(hlo, comps), 1, ())
+    return out
+
+
 @dataclasses.dataclass
 class CompStats:
     flops: float = 0.0
@@ -189,26 +299,11 @@ def _analyze_comp(lines: list[str], n_devices: int) -> CompStats:
             st.flops += 2.0 * out_n  # negligible in our models
 
         # collectives
-        for op in _COLL_OPS:
-            if re.search(rf"\b{op}(-start)?\(", rhs) and "-done" not in rhs:
-                g = _group_size(rhs, n_devices)
-                if g <= 1:
-                    continue
-                in_b = _all_shape_bytes(rhs.split("(", 1)[1])
-                frac = (g - 1) / g
-                if op == "all-reduce":
-                    b = 2 * in_b * frac
-                elif op == "all-gather":
-                    b = max(out_b, in_b) * frac
-                elif op == "reduce-scatter":
-                    b = in_b * frac
-                elif op == "all-to-all":
-                    b = in_b * frac
-                else:
-                    b = in_b
-                st.coll_bytes += b
-                st.coll_by_op[op] = st.coll_by_op.get(op, 0.0) + b
-                break
+        mc = _match_collective(rhs, out_b, n_devices)
+        if mc is not None:
+            op, _in_b, b, _g = mc
+            st.coll_bytes += b
+            st.coll_by_op[op] = st.coll_by_op.get(op, 0.0) + b
     return st
 
 

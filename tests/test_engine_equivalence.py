@@ -4,7 +4,9 @@
 identical dynamics to the original scatter/segment implementation kept in
 ``simulator_ref.py``.  ``out_wo`` is excluded: it is a static arbitration
 key whose encoding intentionally changed (ejection -> switch id, wireless
--> receiver id); it never leaves the step.
+-> receiver id); it never leaves the step.  ``mc_src`` is the reference
+engine's internal multicast-copy feeder pointer (simulator.py threads the
+same information through ``src_of``) and has no counterpart by name.
 """
 import numpy as np
 import pytest
@@ -14,8 +16,9 @@ from repro.core.constants import (DEFAULT_PHY, Fabric, MacMode, PhyParams,
                                   SimParams)
 from repro.core.routing import compute_routing
 from repro.core.topology import build_xcym
+from repro.workloads.trace import Trace, mcast, p2p, phase
 
-SKIP_FIELDS = {"out_wo"}
+SKIP_FIELDS = {"out_wo", "mc_src"}
 
 
 def _compare(topo, rt, tt, phy, sim):
@@ -62,4 +65,43 @@ def test_engines_equivalent_wireless_variants(case):
         sim = SimParams(cycles=500, warmup=0, mac=MacMode.TOKEN)
     tt = traffic.uniform_random(topo, 0.8, 0.3, sim.cycles, phy.pkt_flits,
                                 seed=7)
+    _compare(topo, rt, tt, phy, sim)
+
+
+_MC_TRACE = Trace("eq", 8, [
+    phase([mcast(0, (2, 3, 4, 5, 6, 7), 2048.0),
+           mcast(4, (0, 1, 2, 3), 1024.0)], label="c0:all-reduce"),
+    phase([p2p(1, 6, 512.0), p2p(6, 1, 512.0)], label="c1:permute"),
+    phase([mcast(2, (0, 6), 512.0), mcast(5, (0, 1, 6, 7), 512.0)],
+          label="c2:bcast"),
+])
+
+
+@pytest.mark.parametrize("medium", ["crossbar", "single"])
+def test_engines_equivalent_multicast_trace(medium):
+    """The new multicast + phase-barrier paths stay bitwise-equal."""
+    topo = build_xcym(4, 4, Fabric.WIRELESS)
+    rt = compute_routing(topo)
+    phy = PhyParams(wireless_medium=medium,
+                    wireless_flit_cycles=5 if medium == "single" else 1)
+    sim = SimParams(cycles=900, warmup=0)
+    tt = traffic.from_trace(topo, _MC_TRACE, phy.pkt_flits)
+    _compare(topo, rt, tt, phy, sim)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("case", ["matching", "wired", "8c"])
+def test_engines_equivalent_multicast_variants(case):
+    if case == "8c":
+        topo = build_xcym(8, 4, Fabric.WIRELESS)
+        phy = DEFAULT_PHY
+    elif case == "wired":
+        topo = build_xcym(4, 4, Fabric.INTERPOSER)   # expanded unicasts
+        phy = DEFAULT_PHY
+    else:
+        topo = build_xcym(4, 4, Fabric.WIRELESS)
+        phy = PhyParams(wireless_medium="matching")
+    rt = compute_routing(topo)
+    sim = SimParams(cycles=900, warmup=0)
+    tt = traffic.from_trace(topo, _MC_TRACE, phy.pkt_flits)
     _compare(topo, rt, tt, phy, sim)

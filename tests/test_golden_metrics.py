@@ -30,6 +30,13 @@ CASES = {
     "interposer_4c4m_load02": dict(n_chips=4, n_mem=4,
                                    fabric=Fabric.INTERPOSER,
                                    load=0.2, p_mem=0.2),
+    "substrate_4c4m_load02": dict(n_chips=4, n_mem=4,
+                                  fabric=Fabric.SUBSTRATE,
+                                  load=0.2, p_mem=0.2),
+    # SynFull-style two-state MMP application traffic (§IV.D)
+    "app_canneal_wireless_4c4m": dict(n_chips=4, n_mem=4,
+                                      fabric=Fabric.WIRELESS,
+                                      load=1.0, p_mem=0.2, app="canneal"),
 }
 
 INT_FIELDS = ("pkts_delivered", "flits_delivered", "flits_injected")

@@ -1,0 +1,76 @@
+"""Collective-schedule cost model: crossover points and schedule choice."""
+import pytest
+
+from repro.interconnect.scheduler import (DCN, ICI, choose_schedule,
+                                          hierarchical_cost, oneshot_cost,
+                                          ring_cost)
+
+
+def test_ring_vs_oneshot_crossover_in_message_size():
+    """One-shot wins small messages (latency-bound), ring wins large
+    (bandwidth-bound); the crossover is monotone in bytes."""
+    g = 16
+    assert oneshot_cost(1e3, g, ICI) < ring_cost(1e3, g, ICI)
+    assert ring_cost(1e9, g, ICI) < oneshot_cost(1e9, g, ICI)
+    prev = None
+    crossed = False
+    for exp in range(3, 10):
+        b = 10.0 ** exp
+        # diff > 0: one-shot is cheaper (latency-bound regime)
+        diff = ring_cost(b, g, ICI) - oneshot_cost(b, g, ICI)
+        if prev is not None and prev <= 0 < diff:
+            pytest.fail("one-shot advantage must not re-appear after "
+                        "the bandwidth regime takes over")
+        if prev is not None and prev > 0 >= diff:
+            crossed = True
+        prev = diff
+    assert crossed and prev < 0
+
+
+def test_oneshot_latency_term_single_hop():
+    # zero-byte limit: one-shot pays ONE link latency, ring pays 2(g-1)
+    g = 8
+    assert oneshot_cost(0.0, g, ICI) == pytest.approx(ICI.latency_s)
+    assert ring_cost(0.0, g, ICI) == pytest.approx(2 * (g - 1) * ICI.latency_s)
+
+
+def test_ring_bandwidth_term_is_optimal():
+    # large-byte limit: ring moves 2(g-1)/g * B, one-shot (g-1) * B
+    g, b = 16, 1e12
+    assert ring_cost(b, g, ICI) < oneshot_cost(b, g, ICI)
+    assert ring_cost(b, g, ICI) == pytest.approx(
+        2 * (g - 1) / g * b / ICI.bw, rel=1e-3)
+
+
+def test_hierarchical_beats_flat_across_slow_domain():
+    """Two-level schedule wins when a slow domain separates the pods: it
+    sends 1/g_fast of the bytes over the slow links."""
+    b, gf, gs = 1e9, 16, 4
+    flat_slow = ring_cost(b, gf * gs, DCN)
+    hier = hierarchical_cost(b, gf, gs)
+    assert hier < flat_slow
+    # and the slow-domain share of the hierarchical cost uses b/gf bytes
+    assert hierarchical_cost(b, gf, gs) == pytest.approx(
+        ring_cost(b, gf, ICI) + ring_cost(b / gf, gs, DCN))
+
+
+def test_choose_schedule_regimes():
+    # small message, single fast domain -> one-shot (latency-optimal)
+    assert choose_schedule(1e3, 16) == "oneshot"
+    # huge message, single domain -> ring (bandwidth-optimal)
+    assert choose_schedule(1e9, 16) == "ring"
+    # pod-spanning large reduction -> hierarchical
+    assert choose_schedule(1e9, 16, 4) == "hierarchical"
+
+
+def test_choose_schedule_small_group_monotone():
+    """Larger groups only increase the one-shot bandwidth penalty: once
+    ring wins at group g for fixed bytes, it keeps winning for larger g."""
+    b = 1e8
+    seen_ring = False
+    for g in (2, 4, 8, 16, 32, 64):
+        sched = choose_schedule(b, g)
+        if seen_ring:
+            assert sched == "ring", (g, sched)
+        seen_ring |= sched == "ring"
+    assert seen_ring

@@ -1,0 +1,358 @@
+"""Trace-driven workload subsystem: IR, mapping, schedules, emission,
+multicast broadcast semantics, phase barriers, analytic cross-check."""
+import numpy as np
+import pytest
+
+from repro.core import simulator, traffic
+from repro.core.constants import Fabric, PhyParams, SimParams
+from repro.core.metrics import collective_summary, compute_metrics
+from repro.core.routing import compute_routing
+from repro.core.sweep import SweepPoint, run_sweep_batched
+from repro.core.topology import build_xcym
+from repro.interconnect.fabric import (FabricSpec, price_table,
+                                       price_traffic, spec_from_topology)
+from repro.interconnect.hlo_traffic import collective_sequence
+from repro.workloads.hlo import trace_from_collectives, trace_from_hlo
+from repro.workloads.mapping import DeviceMap
+from repro.workloads.schedules import expand_collective
+from repro.workloads.synthetic import synthetic_dnn_trace
+from repro.workloads.trace import (MEM_NODE, Trace, TraceMessage, mcast, p2p,
+                                   phase)
+
+WL = build_xcym(4, 4, Fabric.WIRELESS)
+IP = build_xcym(4, 4, Fabric.INTERPOSER)
+PKT = 64                         # flits; 256 B payload at 32-bit flits
+
+
+def _run(topo, tt, phy=PhyParams(), cycles=2000):
+    rt = compute_routing(topo)
+    ps = simulator.pack(topo, rt, tt, phy, SimParams(cycles=cycles, warmup=0))
+    st = simulator.run(ps, cycles=cycles)
+    return ps, st
+
+
+# ---------------------------------------------------------------- IR / map
+
+def test_trace_ir_and_mapping():
+    dm = DeviceMap(WL, 8)
+    assert sorted(set(dm.dev_chip)) == [0, 1, 2, 3]       # block-assigned
+    for d in range(8):
+        assert WL.chip_of[dm.node_switch(d)] == dm.dev_chip[d]
+    m0 = dm.node_switch(MEM_NODE(0))
+    assert WL.is_mem[m0]
+    # serving WI: every switch maps to a same-chip WI on the wireless fabric
+    sw = WL.serving_wi()
+    assert (sw[:WL.n_switches] >= 0).all()
+    for s in range(WL.n_switches):
+        assert WL.chip_of[WL.wi_switch[sw[s]]] == WL.chip_of[s]
+    with pytest.raises(ValueError):
+        TraceMessage(0, (0,), 1.0)                        # self-message
+    with pytest.raises(ValueError):
+        TraceMessage(0, (), 1.0)
+
+
+def test_trace_scaled_floors_at_emission():
+    tr = Trace("t", 8, [phase([p2p(0, 4, 1e6)], "c")])
+    assert tr.scaled(0.5).bytes_total() == pytest.approx(5e5)
+    tt = traffic.from_trace(WL, tr.scaled(1e-9), PKT)     # << 1 packet
+    assert (tt.births != traffic.NO_PKT).sum() == 1       # floored at one
+
+
+# ---------------------------------------------------------------- schedules
+
+def test_ring_allreduce_phase_structure():
+    dm = DeviceMap(WL, 8)
+    phases = expand_collective("all-reduce", 1024.0, 8, dm, schedule="ring")
+    assert len(phases) == 2 * 7                           # 2(g-1) barriers
+    for ph in phases:
+        assert len(ph.messages) == 8                      # one per device
+        assert all(m.bytes_ == 1024.0 / 8 for m in ph.messages)
+        assert not any(m.is_multicast for m in ph.messages)
+
+
+def test_oneshot_allreduce_is_multicast():
+    dm = DeviceMap(WL, 8)
+    phases = expand_collective("all-reduce", 1024.0, 8, dm,
+                               schedule="oneshot")
+    assert len(phases) == 1
+    msgs = phases[0].messages
+    assert len(msgs) == 8
+    assert all(m.is_multicast and len(m.dsts) == 7 for m in msgs)
+    assert all(m.bytes_ == 1024.0 for m in msgs)
+
+
+def test_strided_groups_span_chips():
+    """DP-style strided groups put one member per chip; their schedules
+    generate the cross-fabric traffic the paper's comparison hinges on."""
+    from repro.configs.base import get_config
+    from repro.workloads.schedules import _blocks
+    from repro.workloads.synthetic import layer_collectives
+
+    assert _blocks(16, 4) == [[0, 1, 2, 3], [4, 5, 6, 7],
+                              [8, 9, 10, 11], [12, 13, 14, 15]]
+    assert _blocks(16, 4, stride=4) == [[0, 4, 8, 12], [1, 5, 9, 13],
+                                        [2, 6, 10, 14], [3, 7, 11, 15]]
+    dm = DeviceMap(WL, 16)
+    calls = layer_collectives(get_config("granite-8b"), dm, 1024,
+                              n_layers_cap=1)
+    dp = [c for c in calls if c.stride > 1]
+    assert dp and dp[0].stride == 4 and dp[0].group_size == 4
+    phases = expand_collective("all-reduce", 1e3, 4, dm, schedule="ring",
+                               stride=4)
+    assert any(dm.node_chip(m.src) != dm.node_chip(m.dsts[0])
+               for m in phases[0].messages)
+    # contiguous TP groups stay intra-chip under block mapping
+    tp = expand_collective("all-reduce", 1e3, 4, dm, schedule="ring")
+    assert all(dm.node_chip(m.src) == dm.node_chip(m.dsts[0])
+               for m in tp[0].messages)
+
+
+def test_hierarchical_structure_and_parallel_blocks():
+    dm = DeviceMap(WL, 8)
+    phases = expand_collective("all-reduce", 1e6, 8, dm,
+                               schedule="hierarchical")
+    # gf=2 per chip: 1 RS phase + 1 leader one-shot + 1 AG phase
+    assert len(phases) == 3
+    leaders = phases[1].messages
+    assert all(m.is_multicast for m in leaders)
+    # groups smaller than the device count run as concurrent blocks
+    tp = expand_collective("all-reduce", 64.0, 2, dm, schedule="ring")
+    assert len(tp) == 2
+    assert len(tp[0].messages) == 8                       # 4 blocks x 2
+
+
+# ------------------------------------------------------------ HLO pipeline
+
+HLO_FIXTURE = """\
+HloModule toy
+
+%loop_body (p: (s32[], f32[64])) -> (s32[], f32[64]) {
+  %p = (s32[], f32[64]) parameter(0)
+  %g = f32[64]{0} get-tuple-element((s32[], f32[64]) %p), index=1
+  %ar = f32[64]{0} all-reduce(f32[64]{0} %g), replica_groups={{0,1,2,3,4,5,6,7}}, to_apply=%add
+  ROOT %t = (s32[], f32[64]) tuple(%p, %ar)
+}
+
+%loop_cond (p: (s32[], f32[64])) -> pred[] {
+  %p = (s32[], f32[64]) parameter(0)
+  %c = s32[] constant(3)
+  ROOT %lt = pred[] compare(%p, %c), direction=LT
+}
+
+ENTRY %main (x: f32[64]) -> f32[64] {
+  %x = f32[64]{0} parameter(0)
+  %ag = f32[512]{0} all-gather(f32[64]{0} %x), replica_groups=[1,8], dimensions={0}
+  %w = (s32[], f32[64]) while((s32[], f32[64]) %init), condition=%loop_cond, body=%loop_body
+  ROOT %out = f32[64]{0} get-tuple-element((s32[], f32[64]) %w), index=1
+}
+"""
+
+
+def test_collective_sequence_orders_and_trip_counts():
+    seq = collective_sequence(HLO_FIXTURE, 8)
+    assert [c.op for c in seq] == ["all-gather", "all-reduce"]
+    assert seq[0].group_size == 8 and seq[1].group_size == 8
+    assert seq[1].repeat == 3                             # while trip count
+    assert seq[0].payload_bytes == 512 * 4                # gathered output
+
+
+def test_collective_sequence_keeps_group_stride_through_trace():
+    """Strided replica groups (DP layouts) survive parsing AND the
+    group-size clip in trace_from_hlo."""
+    hlo = HLO_FIXTURE.replace(
+        "replica_groups={{0,1,2,3,4,5,6,7}}",
+        "replica_groups={{0,4},{1,5},{2,6},{3,7}}")
+    seq = collective_sequence(hlo, 8)
+    ar = [c for c in seq if c.op == "all-reduce"][0]
+    assert ar.group_size == 2 and ar.stride == 4
+    dm = DeviceMap(WL, 8)
+    tr = trace_from_hlo(hlo, dm, name="strided", schedule="ring")
+    ar_msgs = [m for p in tr.phases if "all-reduce" in p.label
+               for m in p.messages]
+    assert ar_msgs and all(
+        dm.node_chip(m.src) != dm.node_chip(m.dsts[0]) for m in ar_msgs)
+
+
+def test_trace_from_hlo_builds_phases():
+    dm = DeviceMap(WL, 8)
+    tr = trace_from_hlo(HLO_FIXTURE, dm, name="toy")
+    assert tr.n_phases > 0
+    assert tr.meta["n_collectives"] == 2
+    labs = {p.label.split("/")[0] for p in tr.phases}
+    assert {"c0:all-gather", "c1:all-reduce"} <= labs
+
+
+def test_synthetic_trace_shapes():
+    from repro.configs.base import get_config
+    dm = DeviceMap(WL, 8)
+    tr = synthetic_dnn_trace(get_config("granite-8b"), dm, tokens=1024,
+                             n_layers_cap=2)
+    assert tr.n_phases > 0 and tr.bytes_total() > 0
+    assert tr.meta["source"] == "synthetic"
+
+
+def test_residency_traffic_touches_memory():
+    from repro.interconnect.hlo_traffic import CollectiveCall
+    dm = DeviceMap(WL, 8)
+    tr = trace_from_collectives([CollectiveCall("all-reduce", 2048.0, 8)],
+                                dm, "r", residency=True)
+    rd = [p for p in tr.phases if p.label.endswith("/rd")]
+    wr = [p for p in tr.phases if p.label.endswith("/wr")]
+    assert rd and wr
+    assert all(m.src < 0 for m in rd[0].messages)         # stack -> device
+    assert all(m.dsts[0] < 0 for m in wr[0].messages)     # device -> stack
+
+
+# ------------------------------------------------------- emission semantics
+
+def test_emission_wireline_expands_multicast():
+    tr = Trace("t", 8, [phase([mcast(0, (2, 4, 6), 3 * 256.0)], "c")])
+    tt = traffic.from_trace(IP, tr, PKT)
+    live = tt.dests[tt.births != traffic.NO_PKT]
+    assert len(live) == 9 and (live >= 0).all()           # 3 pkts x 3 dsts
+    assert tt.n_mc == 0
+    assert tt.phase_need[0] == 9
+
+
+def test_emission_wireless_groups_by_serving_wi():
+    tr = Trace("t", 8, [phase([mcast(0, (2, 3, 4), 256.0)], "c")])
+    tt = traffic.from_trace(WL, tr, PKT)
+    assert tt.n_mc == 1
+    # devices 2,3 share chip 1's WI (relay fan-out), device 4 on chip 2
+    assert tt.mc_member[0].sum() == 2
+    assert len(tt.phase_need) == 2                        # mc + fanout
+    assert tt.phase_need[0] == 2                          # one copy per WI
+    assert tt.phase_need[1] == 1                          # one relay
+
+
+# ------------------------------------- multicast broadcast (acceptance gate)
+
+def _one_mcast_tables(topo, n_dst):
+    dsts = tuple(range(4, 4 + n_dst))                     # remote chips 2..3
+    tr_mc = Trace("mc", 8, [phase([mcast(0, dsts, 256.0)], "c")])
+    tr_uni = Trace("uni", 8,
+                   [phase([p2p(0, d, 256.0) for d in dsts], "c")])
+    return (traffic.from_trace(topo, tr_mc, PKT),
+            traffic.from_trace(topo, tr_uni, PKT))
+
+
+def test_multicast_occupies_shared_channel_once():
+    """The paper's broadcast advantage, end to end: one multicast to D
+    receivers costs ONE shared-channel occupancy per flit (D receptions),
+    where the equivalent unicasts cost D occupancies — and on wireline
+    both cost D full wire paths."""
+    n_dst = 4                                             # 2 WIs x 2 devs
+    phy = PhyParams(wireless_medium="single", wireless_flit_cycles=5)
+    tt_mc, tt_uni = _one_mcast_tables(WL, n_dst)
+    n_wi_grp = int(tt_mc.mc_member[0].sum())
+    assert n_wi_grp == 2
+    _, st_mc = _run(WL, tt_mc, phy, cycles=4000)
+    _, st_uni = _run(WL, tt_uni, phy, cycles=4000)
+    assert int(st_mc.cur_phase) == tt_mc.n_phases         # trace completed
+    assert int(st_uni.cur_phase) == tt_uni.n_phases
+    # ONE air occupancy per flit for the multicast...
+    assert int(st_mc.wl_tx_flits) == PKT
+    # ...delivered to every member receiver
+    assert int(st_mc.wl_rx_flits) == PKT * n_wi_grp
+    # unicasts pay the channel once per destination
+    assert int(st_uni.wl_tx_flits) == PKT * n_dst
+    assert int(st_uni.wl_rx_flits) == PKT * n_dst
+    # broadcast energy is paid once: wireless-link energy counts one
+    # traversal per flit in both runs' primary accounting
+    rx0 = WL.n_links + tt_mc.n_sources
+    counts_mc = np.asarray(st_mc.counts_into)[rx0:rx0 + WL.n_wi].sum()
+    counts_uni = np.asarray(st_uni.counts_into)[rx0:rx0 + WL.n_wi].sum()
+    assert counts_mc == PKT
+    assert counts_uni == PKT * n_dst
+
+
+def test_multicast_wireline_is_replicated_unicasts():
+    n_dst = 4
+    tt_mc, tt_uni = _one_mcast_tables(IP, n_dst)
+    assert tt_mc.n_mc == 0
+    _, st_mc = _run(IP, tt_mc, cycles=4000)
+    _, st_uni = _run(IP, tt_uni, cycles=4000)
+    assert int(st_mc.cur_phase) == tt_mc.n_phases
+    # identical wire cost: the "multicast" IS D unicasts on wireline
+    assert int(st_mc.flits_del) == int(st_uni.flits_del) == PKT * n_dst
+    wired_mc = np.asarray(st_mc.counts_into)[:IP.n_links].sum()
+    wired_uni = np.asarray(st_uni.counts_into)[:IP.n_links].sum()
+    assert wired_mc == wired_uni > PKT * n_dst            # multi-hop paths
+
+
+def test_multicast_crossbar_delivers_all_copies():
+    for medium in ("crossbar", "matching"):
+        phy = PhyParams(wireless_medium=medium)
+        tt_mc, _ = _one_mcast_tables(WL, 4)
+        _, st = _run(WL, tt_mc, phy, cycles=3000)
+        assert int(st.cur_phase) == tt_mc.n_phases, medium
+        assert int(st.wl_tx_flits) == PKT, medium
+        assert int(st.wl_rx_flits) == 2 * PKT, medium
+
+
+# ------------------------------------------------------------ phase barrier
+
+def test_phase_barrier_orders_dependent_phases():
+    """Ring-style dependent neighbor exchanges must serialize: phase p+1
+    traffic only flies after phase p fully delivers."""
+    msgs = [p2p(d, (d + 1) % 8, 256.0) for d in range(8)]
+    tr = Trace("ring", 8, [phase(msgs, f"s{i}") for i in range(4)])
+    tt = traffic.from_trace(WL, tr, PKT)
+    ps, st = _run(WL, tt, cycles=6000)
+    ends = np.asarray(st.phase_end)[:tt.n_phases]
+    assert int(st.cur_phase) == 4
+    assert (np.diff(ends) > 0).all()                      # strictly ordered
+    m = compute_metrics(ps, st, "ring", 0.0)
+    assert m.trace_done and m.trace_cycles == ends[-1]
+    summary = collective_summary(m, tt.phase_labels)
+    assert sum(r["cycles"] for r in summary.values()) == ends[-1]
+    assert sum(r["flits"] for r in summary.values()) == int(st.flits_del)
+
+
+def test_trace_points_batch_like_singles():
+    """Trace points ride the batched sweep like any other point, and the
+    three fabrics of one trace share a harmonized group."""
+    dm = DeviceMap(WL, 8)
+    tr = synthetic_dnn_trace(
+        __import__("repro.configs.base", fromlist=["get_config"])
+        .get_config("whisper-tiny"), dm, tokens=256,
+        n_layers_cap=1).scaled(1e-4)
+    sim = SimParams(cycles=4000, warmup=0)
+    pts = [SweepPoint(4, 4, fab, trace=tr, sim=sim)
+           for fab in (Fabric.WIRELESS, Fabric.INTERPOSER, Fabric.SUBSTRATE)]
+    batched = run_sweep_batched(pts)
+    singles = [run_sweep_batched([p])[0] for p in pts]
+    for b, s in zip(batched, singles):
+        assert b.pkts_delivered == s.pkts_delivered
+        assert b.phases_done == s.phases_done
+        assert b.phase_end == s.phase_end
+        assert b.wl_tx_flits == s.wl_tx_flits
+        assert b.energy_breakdown == s.energy_breakdown
+
+
+# ------------------------------------------------- analytic 2x cross-check
+
+@pytest.mark.parametrize("fabric", [Fabric.WIRELESS, Fabric.INTERPOSER])
+def test_cycle_link_energy_within_2x_of_analytic(fabric):
+    """Acceptance gate: cycle-accurate wire energy per bit agrees with
+    ``fabric.price_traffic``'s analytic total within 2x, on a small
+    compiled-HLO trace (paths priced by ``fabric.price_table``)."""
+    topo = build_xcym(4, 4, fabric)
+    dm = DeviceMap(topo, 8)
+    tr = trace_from_hlo(HLO_FIXTURE, dm, name="toy").scaled(0.25)
+    tt = traffic.from_trace(topo, tr, PKT)
+    ps, st = _run(topo, tt, cycles=16000)
+    assert int(st.cur_phase) == tt.n_phases               # completed
+    m = compute_metrics(ps, st, "toy", 0.0)
+    bits = m.flits_delivered * 32
+    links_pj_bit = m.energy_breakdown["links"] / bits
+    _total, analytic_pj_bit = price_table(topo, tt, PKT)
+    ratio = links_pj_bit / analytic_pj_bit
+    assert 0.5 <= ratio <= 2.0, (fabric, links_pj_bit, analytic_pj_bit)
+    # price_traffic over the per-trace spec is the same number by
+    # construction (fig7 routes the published figure through it)
+    spec = FabricSpec("trace", analytic_pj_bit, 16.0, 1.0)
+    assert price_traffic(bits / 8, 1, spec).energy_mj * 1e9 / bits \
+        == pytest.approx(analytic_pj_bit)
+    # the uniform-traffic spec exists for report context and stays sane
+    assert spec_from_topology(topo).pj_per_bit > 0
