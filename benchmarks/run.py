@@ -11,7 +11,7 @@ import time
 def main() -> None:
     from benchmarks import (ablations, fig2_uniform, fig3_latency,
                             fig4_cc_traffic, fig5_mc_traffic, fig6_apps,
-                            fig7_ml_traces, simspeed)
+                            fig7_ml_traces, fig8_memory, simspeed)
     suites = {
         "fig2": fig2_uniform.main,
         "fig3": fig3_latency.main,
@@ -19,6 +19,7 @@ def main() -> None:
         "fig5": fig5_mc_traffic.main,
         "fig6": fig6_apps.main,
         "fig7": fig7_ml_traces.main,
+        "fig8": fig8_memory.main,
         "ablations": ablations.main,
         "simspeed": simspeed.main,
     }

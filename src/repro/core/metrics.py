@@ -48,6 +48,22 @@ class Metrics:
     phase_flits: list = dataclasses.field(default_factory=list)
     wl_tx_flits: int = 0       # shared-medium occupancies (sender side)
     wl_rx_flits: int = 0       # receptions (multicast: one per member copy)
+    # closed-loop memory extensions (zero/empty for open-loop traffic).
+    # AMAT = average read round trip, request birth -> reply tail ejection
+    # at the requester; its queue/service components are averages over the
+    # requests the stacks serviced, and the network share is the remainder
+    # (request + reply network time and injection queueing).
+    amat_cycles: float = 0.0
+    amat_reads: int = 0        # completed read round trips measured
+    mem_reads: int = 0         # read requests serviced by the banks
+    mem_writes: int = 0
+    mem_row_hit_rate: float = 0.0
+    mem_queue_cycles: float = 0.0    # avg bank-queue wait per request
+    mem_service_cycles: float = 0.0  # avg row hit/miss service per request
+    mem_network_cycles: float = 0.0  # AMAT - queue - service
+    mem_bw_gbps: float = 0.0         # delivered stack data bandwidth, total
+    outst_peak: int = 0              # max in-flight transactions of any core
+    per_stack: list = dataclasses.field(default_factory=list)
 
     @property
     def trace_done(self) -> bool:
@@ -138,6 +154,39 @@ def compute_metrics_batch(pss: Sequence[PackedSim], st: SimState,
         lat = (float(st.lat_sum[g]) / lat_pkts if lat_pkts else float("nan"))
         thr = flits / window / ps.n_cores
         n_ph = int(ps.ss.n_phases)
+        memkw = {}
+        if ps.mem_on:
+            Ym = ps.topo.n_mem
+            reads = np.asarray(st.mem_reads[g])[:Ym]
+            writes = np.asarray(st.mem_writes[g])[:Ym]
+            hits = np.asarray(st.mem_row_hits[g])[:Ym]
+            q_sum = np.asarray(st.mem_q_sum[g])[:Ym]
+            s_sum = np.asarray(st.mem_svc_sum[g])[:Ym]
+            mflits = np.asarray(st.mem_flits[g])[:Ym]
+            reqs = max(int((reads + writes).sum()), 1)
+            a_pkts = int(st.amat_pkts[g])
+            amat = float(st.amat_sum[g]) / a_pkts if a_pkts else float("nan")
+            q_avg = float(q_sum.sum()) / reqs
+            s_avg = float(s_sum.sum()) / reqs
+            to_gbps = bits * phy.clock_ghz / window
+            memkw = dict(
+                amat_cycles=amat, amat_reads=a_pkts,
+                mem_reads=int(reads.sum()), mem_writes=int(writes.sum()),
+                mem_row_hit_rate=float(hits.sum()) / reqs,
+                mem_queue_cycles=q_avg, mem_service_cycles=s_avg,
+                mem_network_cycles=amat - q_avg - s_avg,
+                mem_bw_gbps=float(mflits.sum()) * to_gbps,
+                outst_peak=int(np.asarray(st.outst_peak[g]).max()),
+                # util: fraction of the stack's full-duplex 4-channel
+                # data capacity (4 flits/cycle in + 4 out); bank service
+                # is counted when it completes, so short windows can show
+                # bursts above the steady-state bound
+                per_stack=[dict(reads=int(reads[y]), writes=int(writes[y]),
+                                row_hits=int(hits[y]),
+                                flits=int(mflits[y]),
+                                bw_gbps=float(mflits[y]) * to_gbps,
+                                util=float(mflits[y]) / window / 8)
+                           for y in range(Ym)])
         out.append(Metrics(
             name=names[g],
             offered_load=offered_loads[g],
@@ -158,6 +207,7 @@ def compute_metrics_batch(pss: Sequence[PackedSim], st: SimState,
                          for x in np.asarray(st.phase_flits[g])[:n_ph]],
             wl_tx_flits=int(st.wl_tx_flits[g]),
             wl_rx_flits=int(st.wl_rx_flits[g]),
+            **memkw,
         ))
     return out
 

@@ -55,6 +55,30 @@ open-loop.  ``phase_end``/``phase_flits`` feed the per-phase metrics.
 With ``n_phases == 0`` and no groups the step reduces bitwise to the
 open-loop unicast engine (goldens pin this).
 
+Closed-loop memory (ISSUE 3; see traffic.py "Memory tables")
+------------------------------------------------------------
+Memory tables turn the stacks from one-way sinks into request/reply
+round trips.  Per-slot packet *lengths* (``lens``) replace the global
+packet length (short read requests / write acks, full-size data).  A
+read/write request's final ejection way at the stack is forced to its
+pseudo-channel (``mem_ch``) — the four ejection ways ARE the stack's
+four channel ports — so per-(switch, way) ejection arbitration admits
+at most one request per (stack, channel) per cycle.  On tail ejection
+the request enters the channel's bank model (``memory.model``): service
+starts at ``max(t+1, bank_busy)``, lasts ``t_row_hit``/``t_row_miss``
+by row-buffer comparison, and the completion cycle is written (via an
+elementwise one-assignment min, no scatter) into the ``rdy`` birth of
+the paired pre-allocated reply slot; the stack's per-channel source row
+then injects the reply in slot order (in-order per-channel response
+queue).  Cores are capped at ``max_outstanding`` in-flight transactions
+(injection gated on ``outst``, credited back when the reply/ack tail
+ejects at the requester — located through the per-(switch, way)
+ejection-winner table, again gather-only).  ``amat_*``/``mem_*``
+counters feed AMAT, per-stack bandwidth and the queue/bank/network
+delay breakdown in ``metrics``.  The whole path is compiled only when
+the table has memory ops (static ``mem_on``); open-loop points run the
+exact pre-memory program and stay byte-identical.
+
 Simplifications (documented in DESIGN.md): instant credit return; one VC
 allocation per target buffer per cycle; time-rotating (round-robin
 equivalent) arbitration priority; an input link's VCs may forward to
@@ -105,12 +129,14 @@ from repro.core.constants import (WMAX, LinkClass, MacMode, PhyParams,
 from repro.core.routing import RoutingTables
 from repro.core.topology import Topology
 from repro.core.traffic import NO_PKT, TrafficTable
+from repro.memory.model import MEM_CH, DEFAULT_DRAM
 
 V = 8            # virtual channels per port (paper §IV)
 DEPTH = 16       # buffer depth in flits (paper §IV)
 DMAX = 12        # arrival-pipe depth >= max link latency
 RXWMAX = 4       # max concurrent rx streams per WI (4-channel stacks, §IV)
 EJ_WAYS = 4      # parallel ejection channels at memory-stack switches
+assert MEM_CH == EJ_WAYS, "pseudo-channels must map 1:1 onto ejection ways"
 
 
 def _bucket(n: int, q: int) -> int:
@@ -173,6 +199,22 @@ class SimStatic(NamedTuple):
     mc_dst: jnp.ndarray      # [M, WMAX] final dst switch of the copy at WI w
     mc_route: jnp.ndarray    # [M] pre-air routing anchor switch
     mc_prim: jnp.ndarray     # [M] lowest member WI (energy-primary copy)
+    # memory tables: closed-loop request/reply (see traffic.py).  Inert
+    # (lens == pkt_len, mem_op == 0) for open-loop tables; the step only
+    # compiles the closed-loop path when ``mem_on`` is set.
+    lens: jnp.ndarray        # [N, K] per-slot packet length in flits
+    mem_op: jnp.ndarray      # [N, K] MEM_* op code (0 = none)
+    mem_ch: jnp.ndarray      # [N, K] pseudo-channel of a request
+    mem_bank: jnp.ndarray    # [N, K] bank within the channel
+    mem_row: jnp.ndarray     # [N, K] DRAM row (row-buffer hit detection)
+    reply_row: jnp.ndarray   # [N, K] paired reply source row (-1)
+    reply_slot: jnp.ndarray  # [N, K] paired reply slot in that row (-1)
+    req_src: jnp.ndarray     # [N, K] requester row to credit (reply slots)
+    req_birth: jnp.ndarray   # [N, K] request birth cycle (reply slots)
+    stack_sw: jnp.ndarray    # [Y] stack base-logic-die switch (pad S-1)
+    t_row_hit: jnp.ndarray   # scalar i32: open-row service cycles
+    t_row_miss: jnp.ndarray  # scalar i32: closed-row service cycles
+    max_outst: jnp.ndarray   # scalar i32: per-core in-flight cap
 
 
 class SimState(NamedTuple):
@@ -204,6 +246,21 @@ class SimState(NamedTuple):
     phase_del: jnp.ndarray    # scalar: ejections in the open phase
     phase_end: jnp.ndarray    # [P] completion cycle + 1 (0 = not done)
     phase_flits: jnp.ndarray  # [P] flits delivered while phase was open
+    # closed-loop memory dynamics (memory tables)
+    rdy: jnp.ndarray          # [N, K] reply birth cycle (NO_PKT = ungated)
+    outst: jnp.ndarray        # [N] in-flight memory transactions
+    bank_busy: jnp.ndarray    # [Y, CH, BK] bank busy-until cycle
+    bank_row: jnp.ndarray     # [Y, CH, BK] open row per bank (-1 = closed)
+    # closed-loop memory stats
+    outst_peak: jnp.ndarray   # [N] max in-flight ever (cap assertion)
+    amat_sum: jnp.ndarray     # f32: read round-trip cycles (birth->reply)
+    amat_pkts: jnp.ndarray
+    mem_reads: jnp.ndarray    # [Y] read requests serviced
+    mem_writes: jnp.ndarray   # [Y] writes serviced
+    mem_row_hits: jnp.ndarray  # [Y] open-row hits
+    mem_q_sum: jnp.ndarray    # [Y] f32: bank queue-wait cycles
+    mem_svc_sum: jnp.ndarray  # [Y] f32: bank service cycles
+    mem_flits: jnp.ndarray    # [Y] data flits served (replies + writes)
     # stats (post-warmup)
     flits_inj: jnp.ndarray
     flits_del: jnp.ndarray
@@ -219,7 +276,8 @@ class SimState(NamedTuple):
     sleep_cycles: jnp.ndarray
 
 
-def init_state(B: int, N: int, P: int = 1) -> SimState:
+def init_state(B: int, N: int, P: int = 1, K: int = 1, Y: int = 1,
+               BK: int = 1) -> SimState:
     i32 = jnp.int32
     zBV = jnp.zeros((B, V), i32)
     return SimState(
@@ -235,6 +293,16 @@ def init_state(B: int, N: int, P: int = 1) -> SimState:
         inj_pushed=jnp.zeros((N,), i32),
         cur_phase=jnp.int32(0), phase_del=jnp.int32(0),
         phase_end=jnp.zeros((P,), i32), phase_flits=jnp.zeros((P,), i32),
+        rdy=jnp.full((N, K), NO_PKT, i32), outst=jnp.zeros((N,), i32),
+        bank_busy=jnp.zeros((Y, MEM_CH, BK), i32),
+        bank_row=jnp.full((Y, MEM_CH, BK), -1, i32),
+        outst_peak=jnp.zeros((N,), i32),
+        amat_sum=jnp.float32(0), amat_pkts=jnp.int32(0),
+        mem_reads=jnp.zeros((Y,), i32), mem_writes=jnp.zeros((Y,), i32),
+        mem_row_hits=jnp.zeros((Y,), i32),
+        mem_q_sum=jnp.zeros((Y,), jnp.float32),
+        mem_svc_sum=jnp.zeros((Y,), jnp.float32),
+        mem_flits=jnp.zeros((Y,), i32),
         flits_inj=jnp.int32(0), flits_del=jnp.int32(0), pkts_del=jnp.int32(0),
         lat_sum=jnp.float32(0), lat_pkts=jnp.int32(0),
         counts_into=jnp.zeros((B,), i32), count_switch=jnp.int32(0),
@@ -250,12 +318,15 @@ def _route_fields(ss: SimStatic, at_switch: jnp.ndarray, dst: jnp.ndarray):
     return oo, ss.o_buf[oo], ss.o_wo[oo], ss.o_is_wl[oo], ss.o_is_ej[oo]
 
 
-def make_step(B: int):
+def make_step(B: int, mem_on: bool = False):
     """Build the per-cycle transition function (shapes baked in).
 
     Scatter-free: arbitration winners are found by masked min over static
     candidate tables using unique priority codes; delivery uses the
-    ``src_of`` inverse map (see module docstring).
+    ``src_of`` inverse map (see module docstring).  ``mem_on`` (static)
+    compiles the closed-loop memory path — bank model, reply gating,
+    outstanding-transaction cap, per-slot packet lengths; with it off the
+    program is exactly the open-loop step.
     """
     NC = B * V
     NCp1 = NC + 1
@@ -407,6 +478,26 @@ def make_step(B: int):
         active = pkt_src >= 0
         occ = jnp.where(active, rcvd - sent, 0)
 
+        # per-slot packet attributes, gathered from the [N, K] tables via
+        # (pkt_src, pkt_idx) — same scheme the phase gather uses.  With
+        # mem_on off the global packet length stands in and ejection ways
+        # stay vc-assigned: the exact open-loop program.
+        Nn, Kk = ss.phases.shape
+        psrc_c = jnp.clip(pkt_src, 0, Nn - 1)
+        pidx_c = jnp.clip(pkt_idx, 0, Kk - 1)
+        way_bv = vcol % ss.b_ej_ways[:, None]                    # [B, V]
+        if mem_on:
+            plen_bv = ss.lens[psrc_c, pidx_c]                    # [B, V]
+            op_bv = jnp.where(active, ss.mem_op[psrc_c, pidx_c], 0)
+            memrq_bv = (op_bv == 1) | (op_bv == 2)
+            ch_bv = jnp.clip(ss.mem_ch[psrc_c, pidx_c], 0, EJ_WAYS - 1)
+            # a request's ejection way IS its pseudo-channel: per-way
+            # arbitration then admits one request per (stack, ch)/cycle
+            way_bv = jnp.where(memrq_bv & out_is_ej,
+                               ch_bv % ss.b_ej_ways[:, None], way_bv)
+        else:
+            plen_bv = ss.pkt_len
+
         # ---- 2b. forwarding: wired links, ejection, wireless -------------
         inflight = pipe.sum(axis=2)                              # [B, V]
         ob_c = jnp.clip(out_buf, 0, B - 1)
@@ -438,7 +529,7 @@ def make_step(B: int):
                           True).all(axis=-1)
         link_free = jnp.where(is_mc, lf_mc, link_free)
         # token MAC: wireless transmission only once the whole packet is here
-        whole = rcvd >= ss.pkt_len
+        whole = rcvd >= plen_bv
         wl_ok = ~out_is_wl | ~ss.mac_token | whole
         # single-channel mode: nothing flies while the channel is busy
         wl_ch_free = ~ss.wl_single | (st.wl_busy_until <= t)
@@ -458,9 +549,9 @@ def make_step(B: int):
         win2_w = jnp.where(m2_w, g2_w[0], BIGC).min(axis=(1, 2))
         # multi-channel ejection: memory stacks sink `b_ej_ways` flits/cycle
         # (4-channel DRAM stacks, paper §IV); cores sink one.  A slot's
-        # ejection "way" is vc % ways; one winner per (switch, way).
-        ways_c = ss.b_ej_ways[csc][:, :, None]                   # [S, CS, 1]
-        way_s = varr[None, None, :] % ways_c                     # [S, CS, V]
+        # ejection "way" is vc % ways (memory requests: their channel);
+        # one winner per (switch, way).
+        way_s = way_bv.reshape(-1)[idx_s]                        # [S, CS, V]
         g_s = jax.lax.optimization_barrier(
             (code2f[idx_s], out_is_ej.reshape(-1)[idx_s]))
         m_ej = cs_ok & g_s[1]
@@ -483,7 +574,7 @@ def make_step(B: int):
             m2_r[None] & (r_cand[None] == jnp.arange(RXWMAX)[:, None, None, None]),
             g2_r[0][None], BIGC).min(axis=(2, 3))                # [RXW, W]
 
-        way_mine = vcol % ss.b_ej_ways[:, None]                  # [B, V]
+        way_mine = way_bv                                        # [B, V]
         owo_s = jnp.clip(out_wo, 0, S - 1)                       # eject: switch
         owo_w = jnp.clip(out_wo, 0, WMAX - 1)                    # wl: dst WI
         r_mine = jnp.clip(ss.b_wi[:, None] % rxw, 0, RXWMAX - 1)
@@ -512,7 +603,7 @@ def make_step(B: int):
         is_wl_fwd = fwd & out_is_wl
 
         sent = sent + fwd.astype(i32)
-        tail = fwd & (sent >= ss.pkt_len)
+        tail = fwd & (sent >= plen_bv)
         ej = fwd & out_is_ej
 
         # ejection stats
@@ -526,9 +617,7 @@ def make_step(B: int):
 
         # ---- phase barrier bookkeeping (trace tables; raw counts — the
         # dependency structure must not depend on the stats warm-up)
-        Nn, Kk = ss.phases.shape
-        phv = ss.phases[jnp.clip(pkt_src, 0, Nn - 1),
-                        jnp.clip(pkt_idx, 0, Kk - 1)]            # [B, V]
+        phv = ss.phases[psrc_c, pidx_c]                          # [B, V]
         phase_del = st.phase_del \
             + (tail_ej & (phv == st.cur_phase)).sum().astype(i32)
         parr = jnp.arange(P, dtype=i32)
@@ -541,6 +630,88 @@ def make_step(B: int):
                               t + 1, st.phase_end)
         cur_phase = st.cur_phase + complete.astype(i32)
         phase_del = jnp.where(complete, 0, phase_del)
+
+        # ---- closed-loop memory: bank model + reply gating (mem tables)
+        rdy, outst = st.rdy, st.outst
+        bank_busy, bank_row = st.bank_busy, st.bank_row
+        amat_sum, amat_pkts = st.amat_sum, st.amat_pkts
+        mem_reads, mem_writes = st.mem_reads, st.mem_writes
+        mem_row_hits = st.mem_row_hits
+        mem_q_sum, mem_svc_sum = st.mem_q_sum, st.mem_svc_sum
+        mem_flits = st.mem_flits
+        if mem_on:
+            f32 = jnp.float32
+            NOPKT = jnp.int32(NO_PKT)
+            Yp, _, BKp = bank_busy.shape
+            psrcf = pkt_src.reshape(-1)
+            pidxf = pkt_idx.reshape(-1)
+            tailf = tail.reshape(-1)
+            # (a) request arrivals: the ejection winner at (stack switch,
+            # way=channel) is the unique request entering (stack, ch)
+            # this cycle; everything below is gathers + elementwise
+            # one-assignment updates over the [Y, CH(, BK)] grids.
+            code_yc = win2_ej[:, jnp.clip(ss.stack_sw, 0, S - 1)].T
+            valid = code_yc < BIGC                               # [Y, CH]
+            slot_yc = jnp.where(valid, code_yc % NCp1, 0)
+            n_w = jnp.clip(psrcf[slot_yc], 0, Nn - 1)
+            k_w = jnp.clip(pidxf[slot_yc], 0, Kk - 1)
+            opw = jnp.where(valid & tailf[slot_yc],
+                            ss.mem_op[n_w, k_w], 0)              # [Y, CH]
+            is_rq = (opw == 1) | (opw == 2)
+            bank_w = jnp.clip(ss.mem_bank[n_w, k_w], 0, BKp - 1)
+            row_w = ss.mem_row[n_w, k_w]
+            bb = jnp.take_along_axis(
+                bank_busy, bank_w[:, :, None], axis=2)[:, :, 0]
+            br = jnp.take_along_axis(
+                bank_row, bank_w[:, :, None], axis=2)[:, :, 0]
+            hit = is_rq & (br == row_w)
+            svc = jnp.where(hit, ss.t_row_hit, ss.t_row_miss)
+            start = jnp.maximum(t + 1, bb)
+            done = start + svc                                   # [Y, CH]
+            oneh = jnp.arange(BKp)[None, None, :] == bank_w[:, :, None]
+            updm = is_rq[:, :, None] & oneh
+            bank_busy = jnp.where(updm, done[:, :, None], bank_busy)
+            bank_row = jnp.where(updm, row_w[:, :, None], bank_row)
+            # reply birth: one-assignment min into the paired slot's rdy
+            rrow = jnp.clip(ss.reply_row[n_w, k_w], 0, Nn - 1)
+            rslot = jnp.clip(ss.reply_slot[n_w, k_w], 0, Kk - 1)
+            rflat = jnp.where(is_rq, rrow * Kk + rslot, -1).reshape(-1)
+            m_rdy = jnp.arange(Nn * Kk, dtype=i32)[:, None] == rflat[None]
+            val = jnp.where(m_rdy, done.reshape(-1)[None], NOPKT).min(axis=1)
+            rdy = jnp.minimum(rdy, val.reshape(Nn, Kk))
+            # per-stack service stats
+            rd_w = is_rq & (opw == 1)
+            wr_w = is_rq & (opw == 2)
+            mem_reads = mem_reads + post * rd_w.sum(1).astype(i32)
+            mem_writes = mem_writes + post * wr_w.sum(1).astype(i32)
+            mem_row_hits = mem_row_hits + post * hit.sum(1).astype(i32)
+            postf = post.astype(f32)
+            mem_q_sum = mem_q_sum + postf * jnp.where(
+                is_rq, (start - (t + 1)).astype(f32), 0.0).sum(1)
+            mem_svc_sum = mem_svc_sum + postf * jnp.where(
+                is_rq, svc.astype(f32), 0.0).sum(1)
+            data_w = jnp.where(rd_w, ss.lens[rrow, rslot],
+                               jnp.where(wr_w, ss.lens[n_w, k_w], 0))
+            mem_flits = mem_flits + post * data_w.sum(1).astype(i32)
+            # (b) reply/ack completion at the requester: AMAT + credit
+            op_all = ss.mem_op[psrc_c, pidx_c]                   # [B, V]
+            is_rep = tail_ej & ((op_all == 3) | (op_all == 4))
+            rb = ss.req_birth[psrc_c, pidx_c]
+            amat_ok = is_rep & (op_all == 3) & (rb >= ss.warmup)
+            amat_sum = amat_sum + post * jnp.where(
+                amat_ok, (t - rb + 1).astype(f32), 0.0).sum()
+            amat_pkts = amat_pkts + post * amat_ok.sum().astype(i32)
+            # outstanding credit: the requester's switch saw at most one
+            # ejection tail per way; check each winner against req_src
+            code_ns = win2_ej[:, jnp.clip(ss.src_switch, 0, S - 1)]
+            v_ns = code_ns < BIGC                                # [EJ, N]
+            slot_ns = jnp.where(v_ns, code_ns % NCp1, 0)
+            rep_ns = v_ns & is_rep.reshape(-1)[slot_ns]
+            req_ns = ss.req_src[jnp.clip(psrcf[slot_ns], 0, Nn - 1),
+                                jnp.clip(pidxf[slot_ns], 0, Kk - 1)]
+            Narr = jnp.arange(ss.src_switch.shape[0], dtype=i32)
+            dec = (rep_ns & (req_ns == Narr[None, :])).sum(0).astype(i32)
+            outst = outst - dec
 
         # non-eject: deliver downstream via the src_of inverse map — each
         # target (buffer, vc) gathers from the unique upstream slot feeding
@@ -607,6 +778,13 @@ def make_step(B: int):
         ivc = jnp.argmax(ifree, axis=1).astype(i32)
         # phase gate: a packet injects only once its phase is open
         ph_ok = (ss.n_phases == 0) | (ss.phases[n_ar, qh] <= cur_phase)
+        if mem_on:
+            # reply slots are born when the bank model services their
+            # request (rdy); requests gate on the in-flight window
+            birth_n = jnp.minimum(birth_n, rdy[n_ar, qh])
+            opq = ss.mem_op[n_ar, qh]
+            is_tx = (opq == 1) | (opq == 2)
+            ph_ok &= ~is_tx | (outst < ss.max_outst)
         can_new = (st.inj_vc < 0) & (st.q_head < K) & (birth_n <= t) \
             & ihas & ph_ok
         # multicast slots encode the group as dests = -(1 + m); the packet
@@ -648,6 +826,10 @@ def make_step(B: int):
         inj_vc = jnp.where(can_new, ivc, st.inj_vc)
         inj_pushed = jnp.where(can_new, 0, st.inj_pushed)
         q_head = st.q_head + can_new.astype(i32)
+        outst_peak = st.outst_peak
+        if mem_on:
+            outst = outst + (can_new & is_tx).astype(i32)
+            outst_peak = jnp.maximum(outst_peak, outst)
 
         # push one flit/cycle/core while there is space (cores write straight
         # into their injection buffer — no pipe, so no src_of either)
@@ -658,7 +840,11 @@ def make_step(B: int):
         rcvd = rcvd + pushc.astype(i32)
         inj_pushed = inj_pushed + can_push.astype(i32)
         flits_inj = st.flits_inj + post * can_push.sum().astype(i32)
-        done = can_push & (inj_pushed >= ss.pkt_len)
+        # the source's current packet sits at q_head - 1 (claims advance
+        # the head); its per-slot length ends the push burst
+        plen_cur = ss.lens[n_ar, jnp.clip(q_head - 1, 0, K - 1)] \
+            if mem_on else ss.pkt_len
+        done = can_push & (inj_pushed >= plen_cur)
         inj_vc = jnp.where(done, -1, inj_vc)
 
         # ---- 4. receiver wake/sleep accounting ([17]) ---------------------
@@ -680,6 +866,11 @@ def make_step(B: int):
             q_head=q_head, inj_vc=inj_vc, inj_pushed=inj_pushed,
             cur_phase=cur_phase, phase_del=phase_del, phase_end=phase_end,
             phase_flits=phase_flits,
+            rdy=rdy, outst=outst, bank_busy=bank_busy, bank_row=bank_row,
+            outst_peak=outst_peak, amat_sum=amat_sum, amat_pkts=amat_pkts,
+            mem_reads=mem_reads, mem_writes=mem_writes,
+            mem_row_hits=mem_row_hits, mem_q_sum=mem_q_sum,
+            mem_svc_sum=mem_svc_sum, mem_flits=mem_flits,
             flits_inj=flits_inj, flits_del=flits_del, pkts_del=pkts_del,
             lat_sum=lat_sum, lat_pkts=lat_pkts, counts_into=counts_into,
             count_switch=count_switch, ctrl_count=ctrl_count,
@@ -690,8 +881,9 @@ def make_step(B: int):
     return step
 
 
-def _scan_point(ss: SimStatic, st: SimState, cycles: int, B: int) -> SimState:
-    step = make_step(B)
+def _scan_point(ss: SimStatic, st: SimState, cycles: int, B: int,
+                mem_on: bool) -> SimState:
+    step = make_step(B, mem_on)
 
     def body(carry, t):
         return step(ss, carry, t), None
@@ -700,13 +892,15 @@ def _scan_point(ss: SimStatic, st: SimState, cycles: int, B: int) -> SimState:
     return final
 
 
-@functools.partial(jax.jit, static_argnums=(2, 3))
-def _run_one(ss: SimStatic, st: SimState, cycles: int, B: int) -> SimState:
-    return _scan_point(ss, st, cycles, B)
+@functools.partial(jax.jit, static_argnums=(2, 3, 4))
+def _run_one(ss: SimStatic, st: SimState, cycles: int, B: int,
+             mem_on: bool = False) -> SimState:
+    return _scan_point(ss, st, cycles, B, mem_on)
 
 
-@functools.partial(jax.jit, static_argnums=(2, 3))
-def _run_mapped(ss: SimStatic, st: SimState, cycles: int, B: int) -> SimState:
+@functools.partial(jax.jit, static_argnums=(2, 3, 4))
+def _run_mapped(ss: SimStatic, st: SimState, cycles: int, B: int,
+                mem_on: bool = False) -> SimState:
     """Sequentially map the per-point scan over a stacked batch.
 
     ``lax.map`` (not ``vmap``): each point's computation is the *identical*
@@ -716,13 +910,16 @@ def _run_mapped(ss: SimStatic, st: SimState, cycles: int, B: int) -> SimState:
     the whole group and from sharding groups across devices (`_run_pmapped`).
     """
     return jax.lax.map(
-        lambda args: _scan_point(args[0], args[1], cycles, B), (ss, st))
+        lambda args: _scan_point(args[0], args[1], cycles, B, mem_on),
+        (ss, st))
 
 
-@functools.partial(jax.pmap, static_broadcasted_argnums=(2, 3))
-def _run_pmapped(ss: SimStatic, st: SimState, cycles: int, B: int) -> SimState:
+@functools.partial(jax.pmap, static_broadcasted_argnums=(2, 3, 4))
+def _run_pmapped(ss: SimStatic, st: SimState, cycles: int, B: int,
+                 mem_on: bool = False) -> SimState:
     return jax.lax.map(
-        lambda args: _scan_point(args[0], args[1], cycles, B), (ss, st))
+        lambda args: _scan_point(args[0], args[1], cycles, B, mem_on),
+        (ss, st))
 
 
 # --------------------------------------------------------------------------
@@ -741,10 +938,16 @@ class PackedSim:
     phy: PhyParams
     sim: SimParams
     dims: dict = dataclasses.field(default_factory=dict)
+    mem_on: bool = False      # closed-loop memory path compiled in
 
     def shape_key(self) -> tuple:
-        """Hashable signature of every padded array shape (batch grouping)."""
-        return tuple((k, np.shape(v)) for k, v in self.ss._asdict().items())
+        """Hashable signature of every padded array shape (batch grouping).
+
+        ``mem_on`` is part of the key: it selects a different compiled
+        step, so open- and closed-loop points never share a batch.
+        """
+        return (("mem_on", self.mem_on),) + tuple(
+            (k, np.shape(v)) for k, v in self.ss._asdict().items())
 
 
 def pack_dims(topo: Topology, tt: TrafficTable,
@@ -774,6 +977,7 @@ def pack_dims(topo: Topology, tt: TrafficTable,
         # buffer lists are disjoint per switch, so candidate counts add up
         cr_max = max((int(sum(indeg[s] for s in sw)) for sw in senders),
                      default=0)
+    dram = getattr(tt, "dram", None)
     return {
         "B": _bucket(Lw + n_inj + n_wi, b_bucket),
         "S": _bucket(topo.n_switches + 1, s_bucket),
@@ -783,6 +987,8 @@ def pack_dims(topo: Topology, tt: TrafficTable,
         "CR": _bucket(max(cr_max, 1), 16),
         "M": _bucket(getattr(tt, "n_mc", 0), 8),
         "P": _bucket(getattr(tt, "n_phases", 0), 8),
+        "Y": _bucket(topo.n_mem, 4),
+        "BK": _bucket(dram.n_banks if dram is not None else 1, 8),
     }
 
 
@@ -953,6 +1159,36 @@ def pack(topo: Topology, rt: RoutingTables, tt: TrafficTable,
         assert tt.mc_member.shape[1] == WMAX
         assert tt.mc_member[:Mn].any(axis=1).all(), "empty multicast group"
 
+    # memory tables (closed-loop request/reply; inert for open-loop tables)
+    mem_on = getattr(tt, "mem_op", None) is not None
+    dram = (getattr(tt, "dram", None) or DEFAULT_DRAM) if mem_on \
+        else DEFAULT_DRAM
+    Y = max(_bucket(topo.n_mem, 4), fl.get("Y", 0))
+    BK = max(_bucket(dram.n_banks if mem_on else 1, 8), fl.get("BK", 0))
+    lens = np.full((N, K), phy.pkt_flits, np.int32)
+    mem_op = np.zeros((N, K), np.int32)
+    mem_ch = np.zeros((N, K), np.int32)
+    mem_bank = np.zeros((N, K), np.int32)
+    mem_row = np.zeros((N, K), np.int32)
+    reply_row = np.full((N, K), -1, np.int32)
+    reply_slot = np.full((N, K), -1, np.int32)
+    req_src = np.full((N, K), -1, np.int32)
+    req_birth = np.full((N, K), NO_PKT, np.int32)
+    if mem_on:
+        assert dram.n_banks <= BK
+        lens[:, :tt.k] = tt.lens
+        mem_op[:, :tt.k] = tt.mem_op
+        mem_ch[:, :tt.k] = tt.mem_ch
+        mem_bank[:, :tt.k] = tt.mem_bank
+        mem_row[:, :tt.k] = tt.mem_row
+        reply_row[:, :tt.k] = tt.reply_row
+        reply_slot[:, :tt.k] = tt.reply_slot
+        req_src[:, :tt.k] = tt.req_src
+        req_birth[:, :tt.k] = tt.req_birth
+    stack_sw = np.full(Y, S - 1, np.int32)
+    stack_sw[:topo.n_mem] = np.nonzero(topo.is_mem)[0]
+    max_outst = dram.max_outstanding if mem_on else 2**30
+
     ctrl_cycles = max(1, phy.ctrl_packet_flits * serv_wl)
 
     ss = SimStatic(
@@ -984,12 +1220,22 @@ def pack(topo: Topology, rt: RoutingTables, tt: TrafficTable,
         n_phases=jnp.int32(Pn),
         mc_member=jnp.asarray(mc_member), mc_dst=jnp.asarray(mc_dst),
         mc_route=jnp.asarray(mc_route), mc_prim=jnp.asarray(mc_prim),
+        lens=jnp.asarray(lens), mem_op=jnp.asarray(mem_op),
+        mem_ch=jnp.asarray(mem_ch), mem_bank=jnp.asarray(mem_bank),
+        mem_row=jnp.asarray(mem_row),
+        reply_row=jnp.asarray(reply_row),
+        reply_slot=jnp.asarray(reply_slot),
+        req_src=jnp.asarray(req_src), req_birth=jnp.asarray(req_birth),
+        stack_sw=jnp.asarray(stack_sw),
+        t_row_hit=jnp.int32(dram.t_row_hit),
+        t_row_miss=jnp.int32(dram.t_row_miss),
+        max_outst=jnp.int32(max_outst),
     )
     dims = {"B": B, "S": S, "R": R, "K": K, "CS": CS, "CR": CR,
-            "M": M, "P": P}
+            "M": M, "P": P, "Y": Y, "BK": BK}
     return PackedSim(ss=ss, B=B, n_cores=topo.n_cores, Lw=Lw,
                      n_inj=n_inj, topo=topo, rt=rt, phy=phy, sim=sim,
-                     dims=dims)
+                     dims=dims, mem_on=mem_on)
 
 
 # --------------------------------------------------------------------------
@@ -1000,10 +1246,18 @@ def _tree_stack(trees):
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
 
 
-def init_state_batch(G: int, B: int, N: int, P: int = 1) -> SimState:
-    st = init_state(B, N, P)
+def init_state_batch(G: int, B: int, N: int, P: int = 1, K: int = 1,
+                     Y: int = 1, BK: int = 1) -> SimState:
+    st = init_state(B, N, P, K, Y, BK)
     return jax.tree_util.tree_map(
         lambda x: jnp.broadcast_to(x, (G,) + x.shape), st)
+
+
+def _state_dims(ps: PackedSim) -> tuple:
+    """(B, N, P, K, Y, BK) for ``init_state`` from a packed point."""
+    N, K = ps.ss.births.shape
+    return (ps.B, int(N), int(ps.ss.phase_need.shape[0]), int(K),
+            int(ps.ss.stack_sw.shape[0]), ps.dims.get("BK", 1))
 
 
 def run_batch(pss: Sequence[PackedSim], cycles: int | None = None,
@@ -1032,15 +1286,15 @@ def run_batch(pss: Sequence[PackedSim], cycles: int | None = None,
                 f"{ps.dims} vs {pss[0].dims} — pack with harmonized floors")
     cycles = cycles or pss[0].sim.cycles
     B = pss[0].B
-    N = int(pss[0].ss.births.shape[0])
-    P = int(pss[0].ss.phase_need.shape[0])
+    sdims = _state_dims(pss[0])
+    mem_on = pss[0].mem_on
     G = len(pss)
     if G == 1:
-        out = _run_one(pss[0].ss, init_state(B, N, P), cycles, B)
+        out = _run_one(pss[0].ss, init_state(*sdims), cycles, B, mem_on)
         out = jax.tree_util.tree_map(lambda x: x[None], out)
         return jax.block_until_ready(out)
     ss = _tree_stack([ps.ss for ps in pss])
-    st = init_state_batch(G, B, N, P)
+    st = init_state_batch(G, *sdims)
     D = devices if devices is not None else jax.local_device_count()
     D = min(D, G)
     if D > 1:
@@ -1050,22 +1304,22 @@ def run_batch(pss: Sequence[PackedSim], cycles: int | None = None,
                 lambda x: jnp.repeat(x[-1:], Gp - G, axis=0), ss)
             ss = jax.tree_util.tree_map(
                 lambda a, b: jnp.concatenate([a, b]), ss, pad)
-            st = init_state_batch(Gp, B, N, P)
+            st = init_state_batch(Gp, *sdims)
         shard = jax.tree_util.tree_map(
             lambda x: x.reshape((D, Gp // D) + x.shape[1:]), ss)
         st_sh = jax.tree_util.tree_map(
             lambda x: x.reshape((D, Gp // D) + x.shape[1:]), st)
-        out = _run_pmapped(shard, st_sh, cycles, B)
+        out = _run_pmapped(shard, st_sh, cycles, B, mem_on)
         out = jax.tree_util.tree_map(
             lambda x: x.reshape((Gp,) + x.shape[2:])[:G], out)
     else:
-        out = _run_mapped(ss, st, cycles, B)
+        out = _run_mapped(ss, st, cycles, B, mem_on)
     return jax.block_until_ready(out)
 
 
 def run(ps: PackedSim, cycles: int | None = None) -> SimState:
     """Single-point API (a batch of one; same step program as batches)."""
     cycles = cycles or ps.sim.cycles
-    st = init_state(ps.B, int(ps.ss.births.shape[0]),
-                    int(ps.ss.phase_need.shape[0]))
-    return jax.block_until_ready(_run_one(ps.ss, st, cycles, ps.B))
+    st = init_state(*_state_dims(ps))
+    return jax.block_until_ready(
+        _run_one(ps.ss, st, cycles, ps.B, ps.mem_on))

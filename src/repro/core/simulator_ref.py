@@ -15,6 +15,16 @@ receiver-side fan-out threaded through an engine-internal ``mc_src``
 pointer), in ``simulator.py`` in candidate-table/gather style — so the
 differential tests pin the new paths from two independent formulations.
 
+Semantics extension (ISSUE 3): closed-loop memory request/reply round
+trips with the per-stack DRAM bank model (see simulator.py "Closed-loop
+memory" and memory/model.py) — here in scatter style: request arrivals
+scatter into the ``[Y, CH, BK]`` bank state and ``rdy`` reply births
+(``.at[].min``/``.set`` with drop-mode out-of-bounds masking),
+outstanding-window credits scatter-add into ``outst``; ``simulator.py``
+instead locates the unique per-(stack, channel) and per-(switch, way)
+ejection winners through its candidate tables and updates with masked
+elementwise min — two independent formulations, pinned bitwise-equal.
+
 Original module docstring follows.
 
 Cycle-accurate flit-level simulator for multichip NoCs (paper §IV).
@@ -79,6 +89,7 @@ from repro.core.constants import (WMAX, LinkClass, MacMode, PhyParams,
 from repro.core.routing import RoutingTables
 from repro.core.topology import Topology
 from repro.core.traffic import NO_PKT, TrafficTable
+from repro.memory.model import MEM_CH, DEFAULT_DRAM
 
 V = 8            # virtual channels per port (paper §IV)
 DEPTH = 16       # buffer depth in flits (paper §IV)
@@ -135,6 +146,20 @@ class SimStatic(NamedTuple):
     mc_dst: jnp.ndarray      # [M, WMAX]
     mc_route: jnp.ndarray    # [M]
     mc_prim: jnp.ndarray     # [M]
+    # memory tables (closed-loop request/reply; see simulator.py)
+    lens: jnp.ndarray        # [N, K] per-slot packet length in flits
+    mem_op: jnp.ndarray      # [N, K] MEM_* op code (0 = none)
+    mem_ch: jnp.ndarray      # [N, K]
+    mem_bank: jnp.ndarray    # [N, K]
+    mem_row: jnp.ndarray     # [N, K]
+    reply_row: jnp.ndarray   # [N, K]
+    reply_slot: jnp.ndarray  # [N, K]
+    req_src: jnp.ndarray     # [N, K]
+    req_birth: jnp.ndarray   # [N, K]
+    stack_of: jnp.ndarray    # [S] stack index of a switch (-1 = not a stack)
+    t_row_hit: jnp.ndarray   # scalar i32
+    t_row_miss: jnp.ndarray  # scalar i32
+    max_outst: jnp.ndarray   # scalar i32
 
 
 class SimState(NamedTuple):
@@ -168,6 +193,21 @@ class SimState(NamedTuple):
     phase_del: jnp.ndarray    # scalar
     phase_end: jnp.ndarray    # [P]
     phase_flits: jnp.ndarray  # [P]
+    # closed-loop memory dynamics + stats (names match simulator.py so the
+    # differential tests compare them field by field)
+    rdy: jnp.ndarray          # [N, K]
+    outst: jnp.ndarray        # [N]
+    bank_busy: jnp.ndarray    # [Y, CH, BK]
+    bank_row: jnp.ndarray     # [Y, CH, BK]
+    outst_peak: jnp.ndarray   # [N]
+    amat_sum: jnp.ndarray     # f32
+    amat_pkts: jnp.ndarray
+    mem_reads: jnp.ndarray    # [Y]
+    mem_writes: jnp.ndarray   # [Y]
+    mem_row_hits: jnp.ndarray  # [Y]
+    mem_q_sum: jnp.ndarray    # [Y] f32
+    mem_svc_sum: jnp.ndarray  # [Y] f32
+    mem_flits: jnp.ndarray    # [Y]
     # stats (post-warmup)
     flits_inj: jnp.ndarray
     flits_del: jnp.ndarray
@@ -183,7 +223,8 @@ class SimState(NamedTuple):
     sleep_cycles: jnp.ndarray
 
 
-def init_state(B: int, N: int, P: int = 1) -> SimState:
+def init_state(B: int, N: int, P: int = 1, K: int = 1, Y: int = 1,
+               BK: int = 1) -> SimState:
     i32 = jnp.int32
     zBV = jnp.zeros((B, V), i32)
     return SimState(
@@ -199,6 +240,16 @@ def init_state(B: int, N: int, P: int = 1) -> SimState:
         inj_pushed=jnp.zeros((N,), i32),
         cur_phase=jnp.int32(0), phase_del=jnp.int32(0),
         phase_end=jnp.zeros((P,), i32), phase_flits=jnp.zeros((P,), i32),
+        rdy=jnp.full((N, K), NO_PKT, i32), outst=jnp.zeros((N,), i32),
+        bank_busy=jnp.zeros((Y, MEM_CH, BK), i32),
+        bank_row=jnp.full((Y, MEM_CH, BK), -1, i32),
+        outst_peak=jnp.zeros((N,), i32),
+        amat_sum=jnp.float32(0), amat_pkts=jnp.int32(0),
+        mem_reads=jnp.zeros((Y,), i32), mem_writes=jnp.zeros((Y,), i32),
+        mem_row_hits=jnp.zeros((Y,), i32),
+        mem_q_sum=jnp.zeros((Y,), jnp.float32),
+        mem_svc_sum=jnp.zeros((Y,), jnp.float32),
+        mem_flits=jnp.zeros((Y,), i32),
         flits_inj=jnp.int32(0), flits_del=jnp.int32(0), pkts_del=jnp.int32(0),
         lat_sum=jnp.float32(0), lat_pkts=jnp.int32(0),
         counts_into=jnp.zeros((B,), i32), count_switch=jnp.int32(0),
@@ -214,8 +265,12 @@ def _route_fields(ss: SimStatic, at_switch: jnp.ndarray, dst: jnp.ndarray):
     return oo, ss.o_buf[oo], ss.o_wo[oo], ss.o_is_wl[oo], ss.o_is_ej[oo]
 
 
-def make_step(B: int, Wout: int, RXW: int = 1):
-    """Build the per-cycle transition function (shapes baked in)."""
+def make_step(B: int, Wout: int, RXW: int = 1, mem_on: bool = False):
+    """Build the per-cycle transition function (shapes baked in).
+
+    ``mem_on`` (static) compiles the closed-loop memory path in scatter
+    style; off, the program is exactly the open-loop step.
+    """
     NC = B * V
     BIG = jnp.int32(4 * NC)
     flat2d = jnp.arange(NC, dtype=jnp.int32).reshape(B, V)
@@ -360,6 +415,22 @@ def make_step(B: int, Wout: int, RXW: int = 1):
         active = pkt_src >= 0
         occ = jnp.where(active, rcvd - sent, 0)
 
+        # per-slot packet attributes gathered from the [N, K] tables (see
+        # simulator.py): lengths, memory op codes, ejection-way override
+        Nn, Kk = ss.phases.shape
+        psrc_c = jnp.clip(pkt_src, 0, Nn - 1)
+        pidx_c = jnp.clip(pkt_idx, 0, Kk - 1)
+        way_bv = vcol0 % ss.b_ej_ways[:, None]                   # [B, V]
+        if mem_on:
+            plen_bv = ss.lens[psrc_c, pidx_c]
+            op_bv = jnp.where(active, ss.mem_op[psrc_c, pidx_c], 0)
+            memrq_bv = (op_bv == 1) | (op_bv == 2)
+            ch_bv = jnp.clip(ss.mem_ch[psrc_c, pidx_c], 0, MEM_CH - 1)
+            way_bv = jnp.where(memrq_bv & out_is_ej,
+                               ch_bv % ss.b_ej_ways[:, None], way_bv)
+        else:
+            plen_bv = ss.pkt_len
+
         # ---- 2b. forwarding: wired links, ejection, wireless -------------
         inflight = pipe.sum(axis=2)                              # [B, V]
         ob_c = jnp.clip(out_buf, 0, B - 1)
@@ -390,7 +461,7 @@ def make_step(B: int, Wout: int, RXW: int = 1):
                           True).all(axis=-1)
         link_free = jnp.where(is_mc2, lf_mc, link_free)
         # token MAC: wireless transmission only once the whole packet is here
-        whole = rcvd >= ss.pkt_len
+        whole = rcvd >= plen_bv
         wl_ok = ~out_is_wl | ~ss.mac_token | whole
         # single-channel mode: nothing flies while the channel is busy
         wl_ch_free = ~ss.wl_single | (st.wl_busy_until <= t)
@@ -400,10 +471,11 @@ def make_step(B: int, Wout: int, RXW: int = 1):
         elig = active & (occ > 0) & wl_ok \
             & (out_is_ej | ((out_vc >= 0) & (space > 0) & link_free))
         # multi-channel ejection: memory stacks sink `b_ej_ways` flits/cycle
-        # (4-channel DRAM stacks, paper SIV); cores sink one
+        # (4-channel DRAM stacks, paper SIV); cores sink one.  The way is
+        # vc % ways (memory requests: their pseudo-channel, via way_bv)
         vcol = jnp.arange(V, dtype=i32)[None, :]
         wo_base = jnp.where(out_is_ej,
-                            out_wo + (vcol % ss.b_ej_ways[:, None]) * ss.s_pad,
+                            out_wo + way_bv * ss.s_pad,
                             out_wo)
         wo = jnp.where(elig & ~is_mc2, wo_base, Wout)
         score2_all = (flat2d - rot) % NC
@@ -451,7 +523,7 @@ def make_step(B: int, Wout: int, RXW: int = 1):
         is_wl_fwd = fwd & out_is_wl
 
         sent = sent + fwd.astype(i32)
-        tail = fwd & (sent >= ss.pkt_len)
+        tail = fwd & (sent >= plen_bv)
         ej = fwd & out_is_ej
         nej = fwd & ~out_is_ej
 
@@ -465,9 +537,7 @@ def make_step(B: int, Wout: int, RXW: int = 1):
         lat_pkts = st.lat_pkts + post * lat_ok.sum().astype(i32)
 
         # ---- phase barrier bookkeeping (trace tables; raw counts)
-        Nn, Kk = ss.phases.shape
-        phv = ss.phases[jnp.clip(pkt_src, 0, Nn - 1),
-                        jnp.clip(pkt_idx, 0, Kk - 1)]            # [B, V]
+        phv = ss.phases[psrc_c, pidx_c]                          # [B, V]
         phase_del = st.phase_del \
             + (tail_ej & (phv == st.cur_phase)).sum().astype(i32)
         parr = jnp.arange(P, dtype=i32)
@@ -480,6 +550,75 @@ def make_step(B: int, Wout: int, RXW: int = 1):
                               t + 1, st.phase_end)
         cur_phase = st.cur_phase + complete.astype(i32)
         phase_del = jnp.where(complete, 0, phase_del)
+
+        # ---- closed-loop memory: bank model + reply gating, scatter style
+        rdy, outst = st.rdy, st.outst
+        bank_busy, bank_row = st.bank_busy, st.bank_row
+        amat_sum, amat_pkts = st.amat_sum, st.amat_pkts
+        mem_reads, mem_writes = st.mem_reads, st.mem_writes
+        mem_row_hits = st.mem_row_hits
+        mem_q_sum, mem_svc_sum = st.mem_q_sum, st.mem_svc_sum
+        mem_flits = st.mem_flits
+        if mem_on:
+            f32 = jnp.float32
+            Yp, _, BKp = bank_busy.shape
+            # (a) request arrivals: every tail-ejected read/write enters
+            # its (stack, channel, bank); way arbitration guarantees at
+            # most one per (stack, channel) per cycle, so plain scatters
+            # are conflict-free
+            y_bv = jnp.broadcast_to(
+                ss.stack_of[jnp.clip(ss.b_dst, 0, S - 1)][:, None], (B, V))
+            is_rq = tail_ej & memrq_bv & (y_bv >= 0)             # [B, V]
+            yc = jnp.clip(y_bv, 0, Yp - 1)
+            bank_bv = jnp.clip(ss.mem_bank[psrc_c, pidx_c], 0, BKp - 1)
+            row_bv = ss.mem_row[psrc_c, pidx_c]
+            bb = bank_busy[yc, ch_bv, bank_bv]
+            br = bank_row[yc, ch_bv, bank_bv]
+            hit = is_rq & (br == row_bv)
+            svc = jnp.where(hit, ss.t_row_hit, ss.t_row_miss)
+            start = jnp.maximum(t + 1, bb)
+            done = start + svc                                   # [B, V]
+            ty = jnp.where(is_rq, yc, Yp).reshape(-1)
+            bank_busy = bank_busy.at[
+                ty, ch_bv.reshape(-1), bank_bv.reshape(-1)].set(
+                done.reshape(-1), mode="drop")
+            bank_row = bank_row.at[
+                ty, ch_bv.reshape(-1), bank_bv.reshape(-1)].set(
+                row_bv.reshape(-1), mode="drop")
+            # reply birth into the paired slot's rdy
+            rrow_c = jnp.clip(ss.reply_row[psrc_c, pidx_c], 0, Nn - 1)
+            rslot_c = jnp.clip(ss.reply_slot[psrc_c, pidx_c], 0, Kk - 1)
+            trow = jnp.where(is_rq, rrow_c, Nn).reshape(-1)
+            rdy = rdy.at[trow, rslot_c.reshape(-1)].min(
+                done.reshape(-1), mode="drop")
+            # per-stack service stats
+            rd_m = is_rq & (op_bv == 1)
+            wr_m = is_rq & (op_bv == 2)
+            postf = post.astype(f32)
+            mem_reads = mem_reads.at[
+                jnp.where(rd_m, yc, Yp).reshape(-1)].add(post, mode="drop")
+            mem_writes = mem_writes.at[
+                jnp.where(wr_m, yc, Yp).reshape(-1)].add(post, mode="drop")
+            mem_row_hits = mem_row_hits.at[
+                jnp.where(hit, yc, Yp).reshape(-1)].add(post, mode="drop")
+            mem_q_sum = mem_q_sum.at[ty].add(
+                (postf * (start - (t + 1)).astype(f32)).reshape(-1),
+                mode="drop")
+            mem_svc_sum = mem_svc_sum.at[ty].add(
+                (postf * svc.astype(f32)).reshape(-1), mode="drop")
+            data_bv = jnp.where(rd_m, ss.lens[rrow_c, rslot_c],
+                                jnp.where(wr_m, plen_bv, 0))
+            mem_flits = mem_flits.at[ty].add(
+                (post * data_bv).reshape(-1), mode="drop")
+            # (b) reply/ack completion at the requester: AMAT + credit
+            is_rep = tail_ej & ((op_bv == 3) | (op_bv == 4))
+            rb = ss.req_birth[psrc_c, pidx_c]
+            amat_ok = is_rep & (op_bv == 3) & (rb >= ss.warmup)
+            amat_sum = amat_sum + post * jnp.where(
+                amat_ok, (t - rb + 1).astype(f32), 0.0).sum()
+            amat_pkts = amat_pkts + post * amat_ok.sum().astype(i32)
+            rq_t = jnp.where(is_rep, ss.req_src[psrc_c, pidx_c], Nn)
+            outst = outst.at[rq_t.reshape(-1)].add(-1, mode="drop")
 
         # non-eject: schedule arrival downstream, occupy link / rx / channel
         first_wl = is_wl_fwd & (sent == 1)   # header burst => control packet
@@ -547,6 +686,13 @@ def make_step(B: int, Wout: int, RXW: int = 1):
         ivc = jnp.argmax(ifree, axis=1).astype(i32)
         # phase gate: a packet injects only once its phase is open
         ph_ok = (ss.n_phases == 0) | (ss.phases[n_ar, qh] <= cur_phase)
+        if mem_on:
+            # reply slots are born by the bank model (rdy); requests gate
+            # on the per-core in-flight window (see simulator.py)
+            birth_n = jnp.minimum(birth_n, rdy[n_ar, qh])
+            opq = ss.mem_op[n_ar, qh]
+            is_tx = (opq == 1) | (opq == 2)
+            ph_ok &= ~is_tx | (outst < ss.max_outst)
         can_new = (st.inj_vc < 0) & (st.q_head < K) & (birth_n <= t) \
             & ihas & ph_ok
         # multicast slots: dests = -(1 + m); route to the group's anchor
@@ -580,6 +726,10 @@ def make_step(B: int, Wout: int, RXW: int = 1):
         inj_vc = jnp.where(can_new, ivc, st.inj_vc)
         inj_pushed = jnp.where(can_new, 0, st.inj_pushed)
         q_head = st.q_head + can_new.astype(i32)
+        outst_peak = st.outst_peak
+        if mem_on:
+            outst = outst + (can_new & is_tx).astype(i32)
+            outst_peak = jnp.maximum(outst_peak, outst)
 
         # push one flit/cycle/core while there is space
         iv_c = jnp.clip(inj_vc, 0, V - 1)
@@ -589,7 +739,11 @@ def make_step(B: int, Wout: int, RXW: int = 1):
         rcvd = rcvd.at[pb_t, iv_c].add(1, mode="drop")
         inj_pushed = inj_pushed + can_push.astype(i32)
         flits_inj = st.flits_inj + post * can_push.sum().astype(i32)
-        done = can_push & (inj_pushed >= ss.pkt_len)
+        # the source's current packet sits at q_head - 1 (claims advance
+        # the head); its per-slot length ends the push burst
+        plen_cur = ss.lens[n_ar, jnp.clip(q_head - 1, 0, K - 1)] \
+            if mem_on else ss.pkt_len
+        done = can_push & (inj_pushed >= plen_cur)
         inj_vc = jnp.where(done, -1, inj_vc)
 
         # ---- 4. receiver wake/sleep accounting ([17]) ---------------------
@@ -611,6 +765,11 @@ def make_step(B: int, Wout: int, RXW: int = 1):
             q_head=q_head, inj_vc=inj_vc, inj_pushed=inj_pushed,
             cur_phase=cur_phase, phase_del=phase_del, phase_end=phase_end,
             phase_flits=phase_flits,
+            rdy=rdy, outst=outst, bank_busy=bank_busy, bank_row=bank_row,
+            outst_peak=outst_peak, amat_sum=amat_sum, amat_pkts=amat_pkts,
+            mem_reads=mem_reads, mem_writes=mem_writes,
+            mem_row_hits=mem_row_hits, mem_q_sum=mem_q_sum,
+            mem_svc_sum=mem_svc_sum, mem_flits=mem_flits,
             flits_inj=flits_inj, flits_del=flits_del, pkts_del=pkts_del,
             lat_sum=lat_sum, lat_pkts=lat_pkts, counts_into=counts_into,
             count_switch=count_switch, ctrl_count=ctrl_count,
@@ -621,10 +780,10 @@ def make_step(B: int, Wout: int, RXW: int = 1):
     return step
 
 
-@functools.partial(jax.jit, static_argnums=(2, 3, 4, 5))
+@functools.partial(jax.jit, static_argnums=(2, 3, 4, 5, 6))
 def _run(ss: SimStatic, st: SimState, cycles: int, B: int,
-         Wout: int, RXW: int = 1) -> SimState:
-    step = make_step(B, Wout, RXW)
+         Wout: int, RXW: int = 1, mem_on: bool = False) -> SimState:
+    step = make_step(B, Wout, RXW, mem_on)
 
     def body(carry, t):
         return step(ss, carry, t), None
@@ -650,6 +809,9 @@ class PackedSim:
     phy: PhyParams
     sim: SimParams
     RXW: int = 1
+    mem_on: bool = False
+    Y: int = 1
+    BK: int = 1
 
 
 def pack(topo: Topology, rt: RoutingTables, tt: TrafficTable,
@@ -786,6 +948,37 @@ def pack(topo: Topology, rt: RoutingTables, tt: TrafficTable,
         mc_route[:Mn] = tt.mc_route
         mc_prim[:Mn] = np.argmax(tt.mc_member, axis=1)
 
+    # memory tables (closed-loop request/reply; dims mirror simulator.pack
+    # so the differential tests compare identically-shaped states)
+    mem_on = getattr(tt, "mem_op", None) is not None
+    dram = (getattr(tt, "dram", None) or DEFAULT_DRAM) if mem_on \
+        else DEFAULT_DRAM
+    Y = _bucket(topo.n_mem, 4)
+    BK = _bucket(dram.n_banks if mem_on else 1, 8)
+    lens = np.full((N, K), phy.pkt_flits, np.int32)
+    mem_op = np.zeros((N, K), np.int32)
+    mem_ch = np.zeros((N, K), np.int32)
+    mem_bank = np.zeros((N, K), np.int32)
+    mem_row = np.zeros((N, K), np.int32)
+    reply_row = np.full((N, K), -1, np.int32)
+    reply_slot = np.full((N, K), -1, np.int32)
+    req_src = np.full((N, K), -1, np.int32)
+    req_birth = np.full((N, K), NO_PKT, np.int32)
+    if mem_on:
+        lens[:, :tt.k] = tt.lens
+        mem_op[:, :tt.k] = tt.mem_op
+        mem_ch[:, :tt.k] = tt.mem_ch
+        mem_bank[:, :tt.k] = tt.mem_bank
+        mem_row[:, :tt.k] = tt.mem_row
+        reply_row[:, :tt.k] = tt.reply_row
+        reply_slot[:, :tt.k] = tt.reply_slot
+        req_src[:, :tt.k] = tt.req_src
+        req_birth[:, :tt.k] = tt.req_birth
+    stack_of = np.full(S, -1, np.int32)
+    for y, s in enumerate(np.nonzero(topo.is_mem)[0]):
+        stack_of[int(s)] = y
+    max_outst = dram.max_outstanding if mem_on else 2**30
+
     ctrl_cycles = max(1, phy.ctrl_packet_flits * serv_wl)
 
     ss = SimStatic(
@@ -814,15 +1007,26 @@ def pack(topo: Topology, rt: RoutingTables, tt: TrafficTable,
         n_phases=jnp.int32(Pn),
         mc_member=jnp.asarray(mc_member), mc_dst=jnp.asarray(mc_dst),
         mc_route=jnp.asarray(mc_route), mc_prim=jnp.asarray(mc_prim),
+        lens=jnp.asarray(lens), mem_op=jnp.asarray(mem_op),
+        mem_ch=jnp.asarray(mem_ch), mem_bank=jnp.asarray(mem_bank),
+        mem_row=jnp.asarray(mem_row),
+        reply_row=jnp.asarray(reply_row),
+        reply_slot=jnp.asarray(reply_slot),
+        req_src=jnp.asarray(req_src), req_birth=jnp.asarray(req_birth),
+        stack_of=jnp.asarray(stack_of),
+        t_row_hit=jnp.int32(dram.t_row_hit),
+        t_row_miss=jnp.int32(dram.t_row_miss),
+        max_outst=jnp.int32(max_outst),
     )
     return PackedSim(ss=ss, B=B, Wout=Wout, n_cores=topo.n_cores, Lw=Lw,
                      n_inj=n_inj, topo=topo, rt=rt, phy=phy, sim=sim,
-                     RXW=RXW)
+                     RXW=RXW, mem_on=mem_on, Y=Y, BK=BK)
 
 
 def run(ps: PackedSim, cycles: int | None = None) -> SimState:
     cycles = cycles or ps.sim.cycles
-    st = init_state(ps.B, ps.ss.births.shape[0],
-                    int(ps.ss.phase_need.shape[0]))
+    N, K = ps.ss.births.shape
+    st = init_state(ps.B, int(N), int(ps.ss.phase_need.shape[0]),
+                    int(K), ps.Y, ps.BK)
     return jax.block_until_ready(
-        _run(ps.ss, st, cycles, ps.B, ps.Wout, ps.RXW))
+        _run(ps.ss, st, cycles, ps.B, ps.Wout, ps.RXW, ps.mem_on))

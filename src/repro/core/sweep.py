@@ -35,7 +35,7 @@ from repro.core.metrics import Metrics, compute_metrics_batch
 from repro.core.routing import compute_routing
 from repro.core.topology import Topology, build_xcym
 
-HARMONIZED_DIMS = ("B", "S", "R", "K", "CS", "CR", "M", "P")
+HARMONIZED_DIMS = ("B", "S", "R", "K", "CS", "CR", "M", "P", "Y", "BK")
 
 
 @functools.lru_cache(maxsize=64)
@@ -54,6 +54,13 @@ class SweepPoint:
     phase-barrier ML workload trace (``workloads.Trace``), lowered
     fabric-aware by ``traffic.from_trace``; ``load``/``p_mem``/``app``
     are ignored for trace points.
+
+    ``mem`` (a ``memory.MemSweepSpec``) switches the point to closed-loop
+    memory traffic: request/reply round trips against the in-package
+    stacks, gated at ``dram.max_outstanding`` per core.  ``closed_loop``
+    applies the same reinterpretation to ``app`` MMP traffic (its
+    ``p_mem`` packets become round-trip reads; ``dram`` optionally
+    overrides the stack timing).
     """
 
     n_chips: int
@@ -65,6 +72,9 @@ class SweepPoint:
     sim: SimParams = dataclasses.field(default_factory=SimParams)
     app: str | None = None
     trace: object | None = None
+    mem: object | None = None
+    closed_loop: bool = False
+    dram: object | None = None
     wireless_weight: float = 3.0
     name: str | None = None
 
@@ -75,8 +85,17 @@ def _build_point(p: SweepPoint):
                               p.wireless_weight)
     if p.trace is not None:
         tt = traffic.from_trace(topo, p.trace, p.phy.pkt_flits,
-                                p.phy.flit_bits)
+                                p.phy.flit_bits, dram=p.dram)
         label = p.name or f"{topo.name}/{p.trace.name}"
+        return topo, rt, tt, label
+    if p.mem is not None:
+        from repro.memory import closed_loop_uniform
+        tt = closed_loop_uniform(
+            topo, p.mem.load, p.sim.cycles, p.phy.pkt_flits,
+            dram=p.mem.dram, read_frac=p.mem.read_frac,
+            hot_stack_frac=p.mem.hot_stack_frac, seed=p.sim.seed)
+        label = p.name or (f"{topo.name}/memcl/load={p.mem.load}"
+                           f"/mo={p.mem.dram.max_outstanding}")
         return topo, rt, tt, label
     if p.app is None:
         tt = traffic.uniform_random(topo, p.load, p.p_mem, p.sim.cycles,
@@ -84,9 +103,11 @@ def _build_point(p: SweepPoint):
     else:
         tt = traffic.application(topo, traffic.APP_MODELS[p.app],
                                  p.sim.cycles, p.phy.pkt_flits,
-                                 seed=p.sim.seed, load_scale=p.load)
+                                 seed=p.sim.seed, load_scale=p.load,
+                                 closed_loop=p.closed_loop, dram=p.dram)
     label = p.name or f"{topo.name}/load={p.load}/p_mem={p.p_mem}" \
-        + (f"/{p.app}" if p.app else "")
+        + (f"/{p.app}" if p.app else "") \
+        + ("/closed" if p.closed_loop else "")
     return topo, rt, tt, label
 
 
@@ -143,6 +164,9 @@ def run_point(
     phy: PhyParams = DEFAULT_PHY,
     sim: SimParams = SimParams(),
     app: str | None = None,
+    mem: object | None = None,
+    closed_loop: bool = False,
+    dram: object | None = None,
     wireless_weight: float = 3.0,
     name: str | None = None,
 ) -> Metrics:
@@ -152,8 +176,8 @@ def run_point(
     """
     return run_sweep_batched([SweepPoint(
         n_chips=n_chips, n_mem=n_mem, fabric=fabric, load=load, p_mem=p_mem,
-        phy=phy, sim=sim, app=app, wireless_weight=wireless_weight,
-        name=name)])[0]
+        phy=phy, sim=sim, app=app, mem=mem, closed_loop=closed_loop,
+        dram=dram, wireless_weight=wireless_weight, name=name)])[0]
 
 
 def saturation_bandwidth(n_chips: int, n_mem: int, fabric: Fabric,

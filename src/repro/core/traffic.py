@@ -32,6 +32,19 @@ A trace-emitted ``TrafficTable`` carries four optional extensions:
   cluster destinations are relayed by the representative in an emitted
   local fan-out phase), and ``mc_route[m]`` the pre-air routing anchor
   (switch of the lowest member WI).
+
+Memory tables (ISSUE 3; see memory/table.py)
+--------------------------------------------
+A closed-loop table additionally carries per-slot packet lengths
+(``lens``) and the memory-transaction encoding: ``mem_op`` marks read
+requests / writes / their paired replies, ``mem_ch``/``mem_bank``/
+``mem_row`` are the DRAM coordinates, ``reply_row``/``reply_slot`` link
+each request to its pre-allocated reply slot (birth-gated in-engine on
+request delivery + bank service), and ``req_src``/``req_birth`` let a
+reply credit the requester's ``max_outstanding`` window and anchor the
+AMAT measurement.  ``dram`` holds the stack timing parameters
+(``memory.model.DramTimingParams``).  All fields are ``None`` for
+open-loop tables, which stay byte-identical through the engine changes.
 """
 from __future__ import annotations
 
@@ -92,10 +105,26 @@ class TrafficTable:
     mc_dst: Optional[np.ndarray] = None      # [M, WMAX] copy dst switch
     mc_route: Optional[np.ndarray] = None    # [M] pre-air routing anchor
     phase_labels: Optional[list] = None      # [P] collective label per phase
+    # memory tables (closed-loop request/reply; see module docstring)
+    lens: Optional[np.ndarray] = None        # [N_src, K] packet length, flits
+    mem_op: Optional[np.ndarray] = None      # [N_src, K] MEM_* op code
+    mem_ch: Optional[np.ndarray] = None      # [N_src, K] pseudo-channel
+    mem_bank: Optional[np.ndarray] = None    # [N_src, K] bank
+    mem_row: Optional[np.ndarray] = None     # [N_src, K] DRAM row
+    reply_row: Optional[np.ndarray] = None   # [N_src, K] paired reply source
+    reply_slot: Optional[np.ndarray] = None  # [N_src, K] paired reply slot
+    req_src: Optional[np.ndarray] = None     # [N_src, K] requester source row
+    req_birth: Optional[np.ndarray] = None   # [N_src, K] request birth cycle
+    dram: Optional[object] = None            # memory.model.DramTimingParams
 
     @property
     def n_sources(self) -> int:
         return len(self.src_switch)
+
+    @property
+    def has_mem(self) -> bool:
+        """True for closed-loop tables (memory request/reply slots)."""
+        return self.mem_op is not None
 
     @property
     def k(self) -> int:
@@ -175,7 +204,7 @@ def uniform_random(topo: Topology, load: float, p_mem: float, cycles: int,
 
 
 def from_trace(topo: Topology, trace, pkt_flits: int, flit_bits: int = 32,
-               bytes_scale: float = 1.0) -> TrafficTable:
+               bytes_scale: float = 1.0, dram=None) -> TrafficTable:
     """Lower a ``workloads.Trace`` onto ``topo`` as a phase-gated table.
 
     Fabric-aware multicast lowering (the tentpole semantics):
@@ -191,33 +220,59 @@ def from_trace(topo: Topology, trace, pkt_flits: int, flit_bits: int = 32,
       representative in an appended ``<label>/fanout`` phase (local mesh
       traffic on every fabric, so the comparison stays fair).
 
+    Memory ops (ISSUE 3): a ``read``/``write`` message becomes one
+    request/reply transaction per payload packet, lowered through the
+    ``DeviceMap`` residency mapping: the request targets the stack's
+    base-logic-die switch with deterministic (channel, bank, row)
+    coordinates — identical across fabrics — and the service-gated reply
+    slot lives in the stack's per-channel source row.  Both ejections
+    (request at the stack, reply at the device) count toward the phase's
+    barrier, so a phase completes only when its round trips complete.
+
     Sources are all logical devices followed by all memory stacks, in that
     order, regardless of whether they send — keeping N identical across
     the three fabrics so one trace's three points share a sweep batch.
+    Traces with memory ops append (MEM_CH - 1) extra per-channel reply
+    rows per stack after that prefix (the stack's own row doubles as its
+    channel-0 reply row); traces without them keep the historical layout.
     """
+    from repro.memory.model import DEFAULT_DRAM, MEM_CH
+    from repro.memory.table import MEM_READ, MEM_WRITE, MemTableBuilder
     from repro.workloads.mapping import DeviceMap
     from repro.workloads.trace import is_mem_node, mem_stack
 
     dm = DeviceMap(topo, trace.n_devices)
     n_dev = trace.n_devices
-    src_switch = np.concatenate(
-        [dm.dev_switch, dm.mem_switch]).astype(np.int32)
+    n_mem = len(dm.mem_switch)
+    has_mem = any(m.is_mem_op for p in trace.phases for m in p.messages)
+    dram = dram or DEFAULT_DRAM
+    src_switch = [np.asarray(dm.dev_switch), np.asarray(dm.mem_switch)]
+    if has_mem:         # per-channel reply rows (stack row = channel 0)
+        src_switch.append(np.repeat(dm.mem_switch, MEM_CH - 1))
+    src_switch = np.concatenate(src_switch).astype(np.int32)
 
     def src_index(node: int) -> int:
         return n_dev + mem_stack(node) if is_mem_node(node) else node
+
+    def mem_row_of(stack: int, ch: int) -> int:
+        if ch == 0:
+            return n_dev + stack
+        return n_dev + n_mem + stack * (MEM_CH - 1) + (ch - 1)
 
     assert topo.n_wi <= MC_WMAX
     pkt_bytes = pkt_flits * flit_bits / 8
     use_wl = topo.n_wi > 0
     serving = dm.serving_wi
-    per_src: list[list] = [[] for _ in range(len(src_switch))]
+    b = MemTableBuilder(src_switch, dm.mem_switch, pkt_flits, dram,
+                        mem_row_of=mem_row_of)
     phase_need: list[int] = []
     phase_labels: list[str] = []
     mc_key_to_id: dict = {}
     mc_groups: list[tuple] = []     # (members, {wi: dst_switch})
 
     def emit(si: int, pid: int, dest: int, npk: int) -> None:
-        per_src[si].extend([(pid, dest)] * npk)
+        for _ in range(npk):
+            b.plain(si, dest, phase=pid)
 
     for ph in trace.phases:
         pid = len(phase_need)
@@ -226,6 +281,22 @@ def from_trace(topo: Topology, trace, pkt_flits: int, flit_bits: int = 32,
         for msg in ph.messages:
             npk = max(1, int(np.ceil(msg.bytes_ * bytes_scale / pkt_bytes)))
             si = src_index(msg.src)
+            if msg.is_mem_op:
+                # one round trip per payload packet; coordinates are a
+                # deterministic hash of (device, stack, packet) so every
+                # fabric sees the identical address stream
+                stack = mem_stack(msg.dsts[0])
+                op = MEM_READ if msg.op == "read" else MEM_WRITE
+                rdst = dm.node_switch(msg.src)
+                for j in range(npk):
+                    h = msg.src * 40503 + stack * 9176 + j
+                    ch = h % MEM_CH
+                    bank = (h // MEM_CH) % dram.n_banks
+                    drow = (h // (MEM_CH * dram.n_banks)) % dram.n_rows
+                    b.request(si, op, stack, ch, bank, drow,
+                              reply_dest=rdst, phase=pid)
+                need += 2 * npk
+                continue
             s_chip = topo.chip_of[dm.node_switch(msg.src)]
             remote = []
             for d in msg.dsts:
@@ -267,18 +338,6 @@ def from_trace(topo: Topology, trace, pkt_flits: int, flit_bits: int = 32,
             phase_need.append(need2)
             phase_labels.append(ph.label + "/fanout")
 
-    n_src = len(src_switch)
-    K = max(1, max((len(s) for s in per_src), default=1))
-    births = np.full((n_src, K), NO_PKT, np.int32)
-    dests = np.zeros((n_src, K), np.int32)
-    phases = np.zeros((n_src, K), np.int32)
-    for i, slots in enumerate(per_src):
-        if not slots:
-            continue
-        births[i, :len(slots)] = 0      # injection is phase-gated, not timed
-        phases[i, :len(slots)] = [p for p, _ in slots]
-        dests[i, :len(slots)] = [d for _, d in slots]
-
     M = len(mc_groups)
     mc_member = np.zeros((max(M, 1), MC_WMAX), bool)
     mc_dst = np.full((max(M, 1), MC_WMAX), -1, np.int32)
@@ -289,20 +348,30 @@ def from_trace(topo: Topology, trace, pkt_flits: int, flit_bits: int = 32,
             mc_dst[m, w] = reps[w]
         mc_route[m] = topo.wi_switch[members[0]]
 
-    return TrafficTable(
-        src_switch=src_switch, births=births, dests=dests,
+    return b.build(
         offered_load=0.0,
-        phases=phases, phase_need=np.asarray(phase_need, np.int32),
+        phase_need=np.asarray(phase_need, np.int32),
+        phase_labels=phase_labels,
         mc_member=mc_member if M else None,
         mc_dst=mc_dst if M else None,
-        mc_route=mc_route if M else None,
-        phase_labels=phase_labels)
+        mc_route=mc_route if M else None)
 
 
 def application(topo: Topology, model: AppTrafficModel, cycles: int,
-                pkt_flits: int, seed: int = 0,
-                load_scale: float = 1.0) -> TrafficTable:
-    """§IV.D application-specific traffic via a two-state MMP."""
+                pkt_flits: int, seed: int = 0, load_scale: float = 1.0,
+                closed_loop: bool = False, dram=None) -> TrafficTable:
+    """§IV.D application-specific traffic via a two-state MMP.
+
+    With ``closed_loop=True`` the model's ``p_mem`` fraction is
+    reinterpreted as round-trip DRAM *reads*: every memory-destined
+    packet becomes a short read request whose full-size data reply is
+    generated by the stack after its bank-model service delay, and the
+    issuing core is capped at ``dram.max_outstanding`` in-flight
+    transactions (ISSUE 3).  The default is the historical open-loop
+    interpretation — memory packets are one-way sinks — and its tables
+    are byte-identical to what this generator always produced, so the
+    fig2–fig6 goldens pin the escape hatch.
+    """
     rng = np.random.default_rng(seed)
     core_sw = np.nonzero(topo.is_core)[0].astype(np.int32)
     n = len(core_sw)
@@ -320,4 +389,48 @@ def application(topo: Topology, model: AppTrafficModel, cycles: int,
     births = _pack_arrivals(arr, k)
     dests = _sample_dests(rng, topo, n, k, model.p_mem, model.hotspot_skew)
     offered = float(arr.mean()) * pkt_flits
-    return TrafficTable(core_sw, births, dests, offered_load=offered)
+    if not closed_loop:
+        return TrafficTable(core_sw, births, dests, offered_load=offered)
+    return _close_loop(topo, core_sw, births, dests, offered, pkt_flits,
+                       dram, seed)
+
+
+def _close_loop(topo: Topology, core_sw, births, dests, offered,
+                pkt_flits: int, dram, seed: int) -> TrafficTable:
+    """Rebuild an open-loop (births, dests) table with every memory-stack
+    destination converted into a request/reply read transaction.
+
+    Requests are walked in global birth order so each (stack, channel)
+    reply row's in-order injection tracks expected arrival order; the
+    DRAM coordinates come from an independent stream, leaving the base
+    arrival/destination draws untouched.
+    """
+    from repro.memory.model import DEFAULT_DRAM, MEM_CH
+    from repro.memory.table import (MEM_READ, MemTableBuilder,
+                                    mem_source_rows)
+    dram = dram or DEFAULT_DRAM
+    mem_sw = np.nonzero(topo.is_mem)[0].astype(np.int32)
+    stack_of = {int(s): y for y, s in enumerate(mem_sw)}
+    b = MemTableBuilder(mem_source_rows(core_sw, mem_sw), mem_sw,
+                        pkt_flits, dram)
+    live = births != NO_PKT
+    rows_i, ks = np.nonzero(live)
+    order = np.lexsort((rows_i, births[live]))
+    is_mem_dst = np.isin(dests[live], mem_sw)
+    rng2 = np.random.default_rng(seed + 0x5EED)
+    n_req = int(is_mem_dst.sum())
+    chans = rng2.integers(0, MEM_CH, n_req)
+    banks = rng2.integers(0, dram.n_banks, n_req)
+    rws = rng2.integers(0, dram.n_rows, n_req)
+    j = 0
+    for idx in order:
+        i, k = int(rows_i[idx]), int(ks[idx])
+        d, t = int(dests[i, k]), int(births[i, k])
+        if d in stack_of:
+            b.request(i, MEM_READ, stack_of[d], int(chans[j]),
+                      int(banks[j]), int(rws[j]),
+                      reply_dest=int(core_sw[i]), birth=t)
+            j += 1
+        else:
+            b.plain(i, d, birth=t)
+    return b.build(offered)

@@ -38,20 +38,28 @@ import numpy as np
 
 
 def _residency_phases(dm: DeviceMap, bytes_each: float,
-                      label: str, write: bool):
+                      label: str, write: bool, closed: bool = False):
     """Stack <-> device residency traffic around one collective.
 
     Every device appears: the concurrent blocks of ``workloads.schedules``
     partition the whole device range, so each device fetches/writes its
     own payload shard regardless of the per-block group size.
+
+    ``closed`` lowers the traffic as true round trips (``op="read"`` /
+    ``op="write"`` messages — request, bank service, reply; ISSUE 3)
+    instead of the legacy open-loop one-way pushes.
     """
     if dm.topo.n_mem == 0:
         return []
     msgs = []
     for d in range(dm.n_devices):
         stack = int(np.nonzero(dm.mem_switch == dm.dev_mem[d])[0][0])
-        pair = (d, MEM_NODE(stack)) if write else (MEM_NODE(stack), d)
-        msgs.append(TraceMessage(pair[0], (pair[1],), bytes_each))
+        if closed:
+            msgs.append(TraceMessage(d, (MEM_NODE(stack),), bytes_each,
+                                     op="write" if write else "read"))
+        else:
+            pair = (d, MEM_NODE(stack)) if write else (MEM_NODE(stack), d)
+            msgs.append(TraceMessage(pair[0], (pair[1],), bytes_each))
     tag = "wr" if write else "rd"
     return [TracePhase(tuple(msgs), label=f"{label}/{tag}")]
 
@@ -61,9 +69,15 @@ def trace_from_collectives(calls: list[CollectiveCall], dm: DeviceMap,
                            bytes_scale: float = 1.0,
                            max_collectives: int | None = None,
                            fold_repeats: bool = True,
-                           residency: bool = False) -> Trace:
-    """Lower an ordered collective list into a phase trace on ``dm``."""
+                           residency=False) -> Trace:
+    """Lower an ordered collective list into a phase trace on ``dm``.
+
+    ``residency`` may be ``False``, ``True`` (legacy open-loop one-way
+    stack traffic) or ``"closed"`` (round-trip reads/write-acks through
+    the stacks' bank model).
+    """
     phases: list[TracePhase] = []
+    closed = residency == "closed"
     used = 0
     for i, c in enumerate(calls):
         if max_collectives is not None and used >= max_collectives:
@@ -74,12 +88,14 @@ def trace_from_collectives(calls: list[CollectiveCall], dm: DeviceMap,
         label = f"c{i}:{c.op}"
         for _ in range(reps):
             if residency:
-                phases += _residency_phases(dm, payload, label, write=False)
+                phases += _residency_phases(dm, payload, label, write=False,
+                                            closed=closed)
             phases += expand_collective(c.op, payload, c.group_size, dm,
                                         schedule=schedule, label=label,
                                         stride=c.stride)
             if residency:
-                phases += _residency_phases(dm, payload, label, write=True)
+                phases += _residency_phases(dm, payload, label, write=True,
+                                            closed=closed)
         used += 1
     return Trace(name=name, n_devices=dm.n_devices, phases=phases,
                  meta={"schedule": schedule, "bytes_scale": bytes_scale,
@@ -90,7 +106,7 @@ def trace_from_collectives(calls: list[CollectiveCall], dm: DeviceMap,
 def trace_from_hlo(hlo: str, dm: DeviceMap, name: str,
                    schedule: str = "auto", bytes_scale: float = 1.0,
                    max_collectives: int | None = None,
-                   residency: bool = False) -> Trace:
+                   residency=False) -> Trace:
     """Compile optimized-HLO text into a trace on device map ``dm``.
 
     The HLO's logical device count need not match ``dm.n_devices``: group

@@ -45,21 +45,44 @@ class TraceMessage:
     ``len(dsts) > 1`` is a *multicast*: on a broadcast-capable fabric the
     payload crosses the shared medium once; on wireline it is replicated
     into ``len(dsts)`` unicasts at emission.
+
+    ``op`` extends the IR with closed-loop memory operations (ISSUE 3):
+
+    - ``"msg"``: plain one-way data (the default, all collectives);
+    - ``"read"``: ``src`` (a device) reads ``bytes_`` from the single
+      ``MEM_NODE`` destination — emission lowers it to a short request
+      plus a service-gated full-size reply (a round trip, both counted
+      in the phase's barrier);
+    - ``"write"``: ``src`` writes ``bytes_`` to the stack; the stack
+      acks with a short packet after bank service.
     """
 
     src: int
     dsts: tuple[int, ...]
     bytes_: float
+    op: str = "msg"
 
     def __post_init__(self):
         if not self.dsts:
             raise ValueError("message needs at least one destination")
         if self.src in self.dsts:
             raise ValueError(f"self-message: {self.src} -> {self.dsts}")
+        if self.op not in ("msg", "read", "write"):
+            raise ValueError(f"unknown op {self.op!r}")
+        if self.op != "msg":
+            if len(self.dsts) != 1 or not is_mem_node(self.dsts[0]):
+                raise ValueError(
+                    f"{self.op} needs exactly one MEM_NODE destination")
+            if is_mem_node(self.src):
+                raise ValueError(f"{self.op} source must be a device")
 
     @property
     def is_multicast(self) -> bool:
         return len(self.dsts) > 1
+
+    @property
+    def is_mem_op(self) -> bool:
+        return self.op != "msg"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,7 +129,7 @@ class Trace:
         """Same trace with every message's bytes scaled by ``factor``
         (emission floors each message at one packet)."""
         phases = [TracePhase(tuple(
-            TraceMessage(m.src, m.dsts, m.bytes_ * factor)
+            TraceMessage(m.src, m.dsts, m.bytes_ * factor, m.op)
             for m in p.messages), label=p.label) for p in self.phases]
         return Trace(self.name, self.n_devices, phases,
                      {**self.meta, "bytes_scale":
@@ -129,3 +152,14 @@ def p2p(src: int, dst: int, bytes_: float) -> TraceMessage:
 
 def mcast(src: int, dsts: Sequence[int], bytes_: float) -> TraceMessage:
     return TraceMessage(src, tuple(dsts), bytes_)
+
+
+def mem_read(device: int, stack_node: int, bytes_: float) -> TraceMessage:
+    """Closed-loop read: ``device`` fetches ``bytes_`` from ``stack_node``
+    (a ``MEM_NODE``); the reply is generated by the stack's bank model."""
+    return TraceMessage(device, (stack_node,), bytes_, op="read")
+
+
+def mem_write(device: int, stack_node: int, bytes_: float) -> TraceMessage:
+    """Closed-loop write: data to the stack, short ack after service."""
+    return TraceMessage(device, (stack_node,), bytes_, op="write")

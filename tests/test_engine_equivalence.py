@@ -7,6 +7,11 @@ key whose encoding intentionally changed (ejection -> switch id, wireless
 -> receiver id); it never leaves the step.  ``mc_src`` is the reference
 engine's internal multicast-copy feeder pointer (simulator.py threads the
 same information through ``src_of``) and has no counterpart by name.
+
+The closed-loop memory state (``rdy``, ``outst``, ``bank_busy`` /
+``bank_row``, the ``mem_*`` stat arrays) shares field names in both
+engines and is compared like everything else — the bank model and reply
+gating are pinned from two independent formulations (ISSUE 3).
 """
 import numpy as np
 import pytest
@@ -105,3 +110,40 @@ def test_engines_equivalent_multicast_variants(case):
     sim = SimParams(cycles=900, warmup=0)
     tt = traffic.from_trace(topo, _MC_TRACE, phy.pkt_flits)
     _compare(topo, rt, tt, phy, sim)
+
+
+def _closed_loop_table(topo, cycles, phy=DEFAULT_PHY, seed=17):
+    from repro.memory import DramTimingParams, closed_loop_uniform
+    return closed_loop_uniform(
+        topo, 0.5, cycles, phy.pkt_flits,
+        dram=DramTimingParams(max_outstanding=4), seed=seed)
+
+
+def test_engines_equivalent_closed_loop_memory():
+    """ISSUE 3 acceptance: the bank model, reply gating and outstanding
+    credits stay bitwise-equal across both formulations (gather winner
+    tables vs scatter)."""
+    topo = build_xcym(4, 4, Fabric.WIRELESS)
+    rt = compute_routing(topo)
+    sim = SimParams(cycles=600, warmup=100)
+    _compare(topo, rt, _closed_loop_table(topo, sim.cycles), DEFAULT_PHY,
+             sim)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("case", ["single", "token", "wired", "8c"])
+def test_engines_equivalent_closed_loop_variants(case):
+    phy, sim = DEFAULT_PHY, SimParams(cycles=600, warmup=0)
+    if case == "8c":
+        topo = build_xcym(8, 4, Fabric.WIRELESS)
+    elif case == "wired":
+        topo = build_xcym(4, 4, Fabric.INTERPOSER)
+    else:
+        topo = build_xcym(4, 4, Fabric.WIRELESS)
+        if case == "single":
+            phy = PhyParams(wireless_medium="single",
+                            wireless_flit_cycles=5)
+        else:
+            sim = SimParams(cycles=600, warmup=0, mac=MacMode.TOKEN)
+    rt = compute_routing(topo)
+    _compare(topo, rt, _closed_loop_table(topo, sim.cycles, phy), phy, sim)

@@ -37,21 +37,35 @@ CASES = {
     "app_canneal_wireless_4c4m": dict(n_chips=4, n_mem=4,
                                       fabric=Fabric.WIRELESS,
                                       load=1.0, p_mem=0.2, app="canneal"),
+    # closed-loop memory round trips (ISSUE 3): pins the bank model,
+    # reply gating and the AMAT pipeline end to end
+    "memcl_wireless_4c4m_load03": dict(n_chips=4, n_mem=4,
+                                       fabric=Fabric.WIRELESS,
+                                       load=0.3, memcl=1),
 }
 
 INT_FIELDS = ("pkts_delivered", "flits_delivered", "flits_injected")
 FLOAT_FIELDS = ("offered_load", "throughput", "bw_gbps_core",
                 "avg_pkt_latency", "avg_pkt_energy_pj", "energy_pj_bit")
+MEM_FIELDS = ("amat_cycles", "amat_reads", "mem_reads", "mem_writes",
+              "mem_row_hit_rate", "mem_queue_cycles", "mem_service_cycles",
+              "mem_bw_gbps", "outst_peak")
 
 
 def _measure(case: dict) -> dict:
     kw = dict(case)
     kw["fabric"] = Fabric(kw["fabric"])
+    if kw.pop("memcl", None):
+        from repro.memory import MemSweepSpec
+        kw["mem"] = MemSweepSpec(load=kw.pop("load"))
+        kw["load"] = 0.0
     m = run_point(sim=SIM, **kw)
     rec = {f: int(getattr(m, f)) for f in INT_FIELDS}
     rec.update({f: float(getattr(m, f)) for f in FLOAT_FIELDS})
     rec["energy_breakdown"] = {k: float(v)
                                for k, v in m.energy_breakdown.items()}
+    if m.mem_reads or m.mem_writes:
+        rec["memory"] = {f: float(getattr(m, f)) for f in MEM_FIELDS}
     return rec
 
 
@@ -85,6 +99,8 @@ def test_golden_metrics(name):
     for k, v in want["energy_breakdown"].items():
         assert got["energy_breakdown"][k] == pytest.approx(v, rel=1e-6), \
             (name, k)
+    for k, v in want.get("memory", {}).items():
+        assert got["memory"][k] == pytest.approx(v, rel=1e-6), (name, k)
 
 
 if __name__ == "__main__":

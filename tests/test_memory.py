@@ -1,0 +1,234 @@
+"""Closed-loop memory subsystem: bank-model properties, request/reply
+table pairing, outstanding-window cap, engine-vs-reference timing, and
+the open-loop escape hatch (ISSUE 3)."""
+import numpy as np
+import pytest
+
+from repro.core import simulator, traffic
+from repro.core.constants import DEFAULT_PHY, Fabric, SimParams
+from repro.core.routing import compute_routing
+from repro.core.sweep import SweepPoint, run_point, run_sweep_batched
+from repro.core.topology import build_xcym
+from repro.memory import (DEFAULT_DRAM, MEM_CH, DramTimingParams,
+                          MemSweepSpec, MemTableBuilder, closed_loop_uniform,
+                          mem_source_rows, service)
+from repro.memory.table import MEM_READ, MEM_RREPLY, MEM_WACK, MEM_WRITE
+
+WL = build_xcym(4, 4, Fabric.WIRELESS)
+RT = compute_routing(WL)
+SIM = SimParams(cycles=1200, warmup=200)
+
+
+def _run(tt, sim=SIM, topo=WL, rt=RT, phy=DEFAULT_PHY):
+    ps = simulator.pack(topo, rt, tt, phy, sim)
+    return ps, simulator.run(ps)
+
+
+# ------------------------------------------------------- reference model
+
+def test_service_reference_basics():
+    dram = DramTimingParams(t_row_hit=30, t_row_miss=75)
+    arr = np.array([[0, 0, 0, 5],    # cold: miss
+                    [1, 0, 0, 5],    # same open row, queued: hit
+                    [2, 0, 0, 6],    # row conflict: miss
+                    [2, 1, 0, 6]])   # other channel: independent, miss
+    start, done, hit = service(arr, dram)
+    assert list(hit) == [False, True, False, False]
+    assert done[0] == 1 + 75
+    assert start[1] == done[0] and done[1] == done[0] + 30
+    assert done[2] == done[1] + 75
+    assert done[3] == 3 + 75         # no cross-channel interference
+
+
+def test_service_reference_properties_hypothesis():
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    dram = DEFAULT_DRAM
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(
+        st.tuples(st.integers(0, 500), st.integers(0, MEM_CH - 1),
+                  st.integers(0, dram.n_banks - 1),
+                  st.integers(0, dram.n_rows - 1)),
+        min_size=1, max_size=40))
+    def check(reqs):
+        reqs.sort(key=lambda r: r[0])            # arrival order
+        arr = np.array(reqs)
+        start, done, hit = service(arr, dram)
+        # no completion before arrival + the minimum service latency
+        assert (done >= arr[:, 0] + 1 + dram.t_row_hit).all()
+        assert (start >= arr[:, 0] + 1).all()
+        # hit/miss latencies are exactly the two constants
+        svc = done - start
+        assert set(np.unique(svc)) <= {dram.t_row_hit, dram.t_row_miss}
+        assert (svc == np.where(hit, dram.t_row_hit, dram.t_row_miss)).all()
+        # per-bank busy-until is monotone: service order = arrival order
+        for ch in range(MEM_CH):
+            for bk in range(dram.n_banks):
+                sel = (arr[:, 1] == ch) & (arr[:, 2] == bk)
+                d = done[sel]
+                assert (np.diff(d) > 0).all()
+        # the first access to any bank can never hit
+        first = {}
+        for i, (_, ch, bk, _row) in enumerate(reqs):
+            if (ch, bk) not in first:
+                first[(ch, bk)] = i
+                assert not hit[i]
+
+    check()
+
+
+# ------------------------------------------------------- table encoding
+
+def test_closed_loop_table_pairing():
+    dram = DramTimingParams(max_outstanding=4)
+    tt = closed_loop_uniform(WL, 0.4, 800, 64, dram=dram, seed=2)
+    n_cores = WL.n_cores
+    assert tt.n_sources == n_cores + WL.n_mem * MEM_CH
+    reqs = np.argwhere((tt.mem_op == MEM_READ) | (tt.mem_op == MEM_WRITE))
+    assert len(reqs)
+    mem_sw = np.nonzero(WL.is_mem)[0]
+    for i, k in reqs:
+        assert i < n_cores                       # requests come from cores
+        assert tt.dests[i, k] in mem_sw
+        rr, rs = tt.reply_row[i, k], tt.reply_slot[i, k]
+        assert rr >= n_cores                     # reply from a stack row
+        # reply row encodes the (stack, channel) of the request
+        y, ch = divmod(rr - n_cores, MEM_CH)
+        assert ch == tt.mem_ch[i, k]
+        assert tt.src_switch[rr] == mem_sw[y]
+        # the pair points back: requester credit + AMAT epoch
+        op = tt.mem_op[rr, rs]
+        assert op == (MEM_RREPLY if tt.mem_op[i, k] == MEM_READ
+                      else MEM_WACK)
+        assert tt.req_src[rr, rs] == i
+        assert tt.req_birth[rr, rs] == tt.births[i, k]
+        assert tt.births[rr, rs] == traffic.NO_PKT   # service-gated
+        # short requests / full replies for reads; the reverse for writes
+        if tt.mem_op[i, k] == MEM_READ:
+            assert tt.lens[i, k] == dram.req_flits
+            assert tt.lens[rr, rs] == 64
+        else:
+            assert tt.lens[i, k] == 64
+            assert tt.lens[rr, rs] == dram.ack_flits
+
+
+# ------------------------------------------- engine semantics (acceptance)
+
+def test_outstanding_never_exceeds_cap():
+    for cap in (2, 8):
+        dram = DramTimingParams(max_outstanding=cap)
+        tt = closed_loop_uniform(WL, 1.0, SIM.cycles, 64, dram=dram, seed=5)
+        _, st = _run(tt)
+        peak = int(np.asarray(st.outst_peak).max())
+        assert 0 < peak <= cap, (cap, peak)
+        # at saturation the window is actually the binding constraint
+        assert peak == cap
+
+
+def test_engine_bank_timing_matches_reference_model():
+    """Two spaced same-bank reads: the engine's reply births reproduce the
+    reference model's hit/miss service arithmetic exactly."""
+    dram = DramTimingParams()
+    core_sw = np.nonzero(WL.is_core)[0].astype(np.int32)
+    mem_sw = np.nonzero(WL.is_mem)[0].astype(np.int32)
+    b = MemTableBuilder(mem_source_rows(core_sw, mem_sw), mem_sw, 64, dram)
+    gap = 400
+    b.request(0, MEM_READ, 0, 1, 3, 7, reply_dest=int(core_sw[0]), birth=0)
+    b.request(0, MEM_READ, 0, 1, 3, 7, reply_dest=int(core_sw[0]),
+              birth=gap)
+    tt = b.build(0.0)
+    _, st = _run(tt, SimParams(cycles=1000, warmup=0))
+    rdy = np.asarray(st.rdy)
+    row = WL.n_cores + 0 * MEM_CH + 1            # stack 0, channel 1
+    r1, r2 = int(rdy[row, 0]), int(rdy[row, 1])
+    assert r1 < traffic.NO_PKT and r2 < traffic.NO_PKT
+    # identical path and request length => arrivals are `gap` apart; the
+    # second read hits the row opened by the first
+    assert r2 - r1 == gap - dram.t_row_miss + dram.t_row_hit
+    assert int(np.asarray(st.mem_row_hits).sum()) == 1
+    assert int(np.asarray(st.mem_reads).sum()) == 2
+    # both round trips completed and were measured
+    assert int(st.amat_pkts) == 2
+    assert int(np.asarray(st.outst).sum()) == 0
+
+
+def test_closed_loop_batched_equals_single():
+    spec = MemSweepSpec(load=0.3, dram=DramTimingParams(max_outstanding=6))
+    pts = [SweepPoint(4, 4, fab, mem=spec, sim=SIM)
+           for fab in (Fabric.WIRELESS, Fabric.INTERPOSER,
+                       Fabric.SUBSTRATE)]
+    batched = run_sweep_batched(pts)
+    for p, bm in zip(pts, batched):
+        sm = run_sweep_batched([p])[0]
+        assert bm.pkts_delivered == sm.pkts_delivered
+        assert bm.amat_cycles == sm.amat_cycles or (
+            np.isnan(bm.amat_cycles) and np.isnan(sm.amat_cycles))
+        assert bm.mem_reads == sm.mem_reads
+        assert bm.per_stack == sm.per_stack
+
+
+def test_amat_grows_toward_saturation():
+    dram = DramTimingParams(max_outstanding=16)
+    ms = run_sweep_batched([
+        SweepPoint(4, 4, Fabric.WIRELESS, sim=SIM,
+                   mem=MemSweepSpec(load=ld, dram=dram))
+        for ld in (0.05, 0.8)])
+    lo, hi = ms
+    assert lo.amat_reads > 0 and hi.amat_reads > 0
+    assert hi.amat_cycles > lo.amat_cycles
+    assert hi.mem_bw_gbps > lo.mem_bw_gbps
+
+
+# --------------------------------------------------- open-loop escape hatch
+
+def test_application_closed_loop_escape_hatch():
+    """closed_loop=False stays byte-identical (the fig2-fig6 contract);
+    closed_loop=True turns p_mem packets into measured round trips."""
+    model = traffic.APP_MODELS["canneal"]
+    a = traffic.application(WL, model, 800, 64, seed=3)
+    b = traffic.application(WL, model, 800, 64, seed=3)
+    assert np.array_equal(a.births, b.births)
+    assert np.array_equal(a.dests, b.dests)
+    assert not a.has_mem and a.lens is None
+    c = traffic.application(WL, model, 800, 64, seed=3, closed_loop=True)
+    assert c.has_mem
+    # the open-loop core slots survive the rebuild: same birth multiset
+    live_a = np.sort(a.births[a.births != traffic.NO_PKT])
+    live_c = np.sort(c.births[:WL.n_cores][
+        c.births[:WL.n_cores] != traffic.NO_PKT])
+    assert np.array_equal(live_a, live_c)
+    m = run_point(4, 4, Fabric.WIRELESS, 1.0, app="canneal",
+                  closed_loop=True, sim=SIM)
+    assert m.mem_reads > 0 and m.amat_reads > 0
+    assert m.amat_cycles > 0 and m.mem_writes == 0    # p_mem => reads
+
+
+# --------------------------------------------------------- trace mem ops
+
+def test_trace_mem_ops_round_trip():
+    from repro.workloads.trace import Trace, mem_read, mem_write, phase
+    tr = Trace("m", 8, [
+        phase([mem_read(d, -(d % 4 + 1), 256.0) for d in range(8)], "rd"),
+        phase([mem_write(0, -1, 512.0)], "wr"),
+    ])
+    tt = traffic.from_trace(WL, tr, 64)
+    assert tt.has_mem
+    # 8 reads (1 pkt each) + 1 write (2 pkts): 2 ejections per round trip
+    assert tt.phase_need[0] == 16
+    assert tt.phase_need[1] == 4
+    assert tt.n_sources == 8 + WL.n_mem + WL.n_mem * (MEM_CH - 1)
+    _, st = _run(tt, SimParams(cycles=3000, warmup=0))
+    assert int(st.cur_phase) == 2                    # trace completed
+    assert int(st.amat_pkts) == 8
+    assert int(np.asarray(st.mem_writes).sum()) == 2
+    assert int(np.asarray(st.outst).sum()) == 0      # all credited back
+
+
+def test_trace_mem_op_validation():
+    from repro.workloads.trace import TraceMessage
+    with pytest.raises(ValueError, match="MEM_NODE"):
+        TraceMessage(0, (1,), 64.0, op="read")       # device destination
+    with pytest.raises(ValueError, match="source"):
+        TraceMessage(-1, (-2,), 64.0, op="write")    # stack source
