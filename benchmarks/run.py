@@ -1,6 +1,10 @@
 """Benchmark runner: one module per paper figure + ablations + roofline.
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [fig2 fig3 ... | all]
+
+Each suite ends with a one-line ``bench.summary`` row — wall-clock and
+simulated points per second (from ``sweep.POINTS_RUN``) — so perf
+regressions are visible directly in CI logs.
 """
 from __future__ import annotations
 
@@ -11,7 +15,9 @@ import time
 def main() -> None:
     from benchmarks import (ablations, fig2_uniform, fig3_latency,
                             fig4_cc_traffic, fig5_mc_traffic, fig6_apps,
-                            fig7_ml_traces, fig8_memory, simspeed)
+                            fig7_ml_traces, fig8_memory,
+                            fig9_lossy_channel, simspeed)
+    from repro.core import sweep
     suites = {
         "fig2": fig2_uniform.main,
         "fig3": fig3_latency.main,
@@ -20,6 +26,8 @@ def main() -> None:
         "fig6": fig6_apps.main,
         "fig7": fig7_ml_traces.main,
         "fig8": fig8_memory.main,
+        "fig9": fig9_lossy_channel.main,
+        "fig9_lossy_channel": fig9_lossy_channel.main,
         "ablations": ablations.main,
         "simspeed": simspeed.main,
     }
@@ -30,13 +38,20 @@ def main() -> None:
         pass
 
     args = sys.argv[1:] or ["all"]
-    picked = list(suites) if args == ["all"] else args
+    picked = list(dict.fromkeys(suites)) if args == ["all"] else args
+    if args == ["all"]:
+        picked.remove("fig9_lossy_channel")     # alias of fig9
     for name in picked:
         t0 = time.perf_counter()
+        p0 = sweep.POINTS_RUN
         print(f"=== {name} ===", flush=True)
         suites[name]()
-        print(f"=== {name} done in {time.perf_counter()-t0:.1f}s ===",
-              flush=True)
+        dt = time.perf_counter() - t0
+        pts = sweep.POINTS_RUN - p0
+        print(f"bench.summary,{name},wall_s={dt:.1f},points={pts},"
+              f"points_per_s={pts / dt:.3f}" if pts else
+              f"bench.summary,{name},wall_s={dt:.1f},points=0", flush=True)
+        print(f"=== {name} done in {dt:.1f}s ===", flush=True)
 
 
 if __name__ == "__main__":

@@ -64,6 +64,23 @@ class Metrics:
     mem_bw_gbps: float = 0.0         # delivered stack data bandwidth, total
     outst_peak: int = 0              # max in-flight transactions of any core
     per_stack: list = dataclasses.field(default_factory=list)
+    # lossy-PHY extensions (zero/empty unless the point packed a
+    # PhySweepSpec on a wireless fabric).  Goodput counts only flits
+    # that passed CRC and were delivered to a receiver; the air also
+    # carried the failing attempts (wl_tx_flits >= delivered).
+    wl_goodput_gbps: float = 0.0     # delivered wireless payload bandwidth
+    wl_air_cycles: float = 0.0       # channel occupancy: sum attempts*serv
+    wl_air_eff: float = 0.0          # delivered flits per air cycle — the
+    #                                  policy-attributable goodput (wall-
+    #                                  clock goodput also bakes in queueing
+    #                                  chaos; see benchmarks/fig9)
+    wl_retx_rate: float = 0.0        # NACKs per delivered wireless packet
+    wl_pkts: int = 0                 # packets that crossed the air
+    wl_nacks: int = 0                # failed attempts (NACK events)
+    wl_dropped: int = 0              # packets dropped at max_retx
+    wl_rate_hist: dict = dataclasses.field(default_factory=dict)
+    #                                 rate name -> delivered flits
+    retx_energy_share: float = 0.0   # failed-attempt share of link energy
 
     @property
     def trace_done(self) -> bool:
@@ -154,6 +171,37 @@ def compute_metrics_batch(pss: Sequence[PackedSim], st: SimState,
         lat = (float(st.lat_sum[g]) / lat_pkts if lat_pkts else float("nan"))
         thr = flits / window / ps.n_cores
         n_ph = int(ps.ss.n_phases)
+        phykw = {}
+        pl = getattr(ps, "phy_link", None)
+        if pl is not None:
+            # wireless link energy is per-pair under the lossy PHY
+            # (b_epb of the rx buffers is zeroed at pack): every
+            # transmitted flit — including failing attempts — pays the
+            # pair's rate-dependent energy per bit
+            pf = np.asarray(st.wl_pair_flits[g], np.float64)
+            ff = np.asarray(st.wl_fail_flits[g], np.float64)
+            e_pair = float((pf * pl.epb).sum()) * bits
+            e_fail = float((ff * pl.epb).sum()) * bits
+            energy += e_pair
+            wl_pkts = int(st.wl_pkts[g])
+            hist = {}
+            for r, entry in enumerate(pl.table):
+                dfl = int(((pf - ff) * (pl.rate_idx == r)).sum())
+                if dfl:
+                    hist[entry.name] = dfl
+            air = float((pf * pl.serv).sum())
+            phykw = dict(
+                wl_goodput_gbps=float(st.wl_rx_flits[g]) * bits
+                * phy.clock_ghz / window,
+                wl_air_cycles=air,
+                wl_air_eff=float((pf - ff).sum()) / max(air, 1.0),
+                wl_retx_rate=int(st.wl_nacks[g]) / max(wl_pkts, 1),
+                wl_pkts=wl_pkts,
+                wl_nacks=int(st.wl_nacks[g]),
+                wl_dropped=int(st.pkts_dropped[g]),
+                wl_rate_hist=hist,
+                retx_energy_share=e_fail / max(e_pair, 1e-12),
+            )
         memkw = {}
         if ps.mem_on:
             Ym = ps.topo.n_mem
@@ -199,7 +247,9 @@ def compute_metrics_batch(pss: Sequence[PackedSim], st: SimState,
             flits_delivered=flits,
             flits_injected=int(st.flits_inj[g]),
             energy_breakdown=dict(links=float(el[g]), switch=float(es[g]),
-                                  ctrl=float(ec[g]), rx=float(er[g])),
+                                  ctrl=float(ec[g]), rx=float(er[g]),
+                                  **({"wl": e_pair} if pl is not None
+                                     else {})),
             phases_done=int(st.cur_phase[g]),
             n_phases=n_ph,
             phase_end=[int(x) for x in np.asarray(st.phase_end[g])[:n_ph]],
@@ -207,6 +257,7 @@ def compute_metrics_batch(pss: Sequence[PackedSim], st: SimState,
                          for x in np.asarray(st.phase_flits[g])[:n_ph]],
             wl_tx_flits=int(st.wl_tx_flits[g]),
             wl_rx_flits=int(st.wl_rx_flits[g]),
+            **phykw,
             **memkw,
         ))
     return out

@@ -79,10 +79,46 @@ delay breakdown in ``metrics``.  The whole path is compiled only when
 the table has memory ops (static ``mem_on``); open-loop points run the
 exact pre-memory program and stay byte-identical.
 
+Lossy PHY (ISSUE 4; see repro.phy)
+----------------------------------
+With a ``PhySweepSpec`` packed in (static ``phy_on``), the air is no
+longer ideal: every (src WI, dst WI) link carries a statically selected
+rate (per-link ``wireless_flit_cycles`` and energy from ``phy.rates``)
+and a quantized packet error rate.  The wireless hop becomes CRC-checked
+ARQ: the sender holds the whole packet (packet-deep WI buffers, like the
+token MAC), each attempt streams all flits — charging channel occupancy,
+per-pair pacing (``pair_busy``) and transmit energy (``wl_pair_flits``)
+— and the CRC outcome is drawn from a counter-based deterministic hash
+of ``(seed, packet, attempt)`` against the link's PER threshold
+(``phy.retx``).  Failing attempts deliver nothing to the receiver
+(``wl_fail_flits`` counts their wasted flits); a NACK on the tail
+rewinds the sender for the next attempt, and a packet failing
+``max_retx`` attempts is dropped (sender slot and receiver VC freed,
+``pkts_dropped``).  Receivers are store-and-forward under ``rx_hold``:
+an rx-buffer slot neither claims its downstream VC nor forwards until
+the whole packet has arrived (the CRC check completes at the tail).
+
+``rx_hold`` is also set (without the lossy path) whenever the table has
+multicast groups: it breaks the one-shot all-reduce livelock where a
+mid-stream multicast copy held a downstream VC while waiting for air
+flits whose sender was blocked on another copy of the same group — a
+cyclic hold-and-wait the all-or-nothing group backpressure closed.  With
+store-and-forward receivers a granted downstream VC always drains from
+locally buffered flits, so the cycle cannot form.
+
 Simplifications (documented in DESIGN.md): instant credit return; one VC
 allocation per target buffer per cycle; time-rotating (round-robin
 equivalent) arbitration priority; an input link's VCs may forward to
-distinct outputs in the same cycle.
+distinct outputs in the same cycle.  Lossy-PHY simplifications: CRC
+outcome known sender-side at the tail (instant NACK, like the instant
+credit return); failing attempts keep non-crossbar receivers busy but do
+not wake sleepy crossbar receivers.  Under closed-loop memory, an
+ARQ-dropped request/reply loses its transaction's data (no timeout
+layer), but the drop is observed sender-side, so the requester's
+``max_outstanding`` window is credited back immediately and a dropped
+request's pre-allocated reply slot is tombstoned (``dead``) — the
+stack's in-order reply channel skips it rather than wedging behind a
+birth that will never come.
 
 Execution strategy (this file's performance core)
 -------------------------------------------------
@@ -130,6 +166,7 @@ from repro.core.routing import RoutingTables
 from repro.core.topology import Topology
 from repro.core.traffic import NO_PKT, TrafficTable
 from repro.memory.model import MEM_CH, DEFAULT_DRAM
+from repro.phy.retx import crc_fail as _crc_fail
 
 V = 8            # virtual channels per port (paper §IV)
 DEPTH = 16       # buffer depth in flits (paper §IV)
@@ -215,6 +252,16 @@ class SimStatic(NamedTuple):
     t_row_hit: jnp.ndarray   # scalar i32: open-row service cycles
     t_row_miss: jnp.ndarray  # scalar i32: closed-row service cycles
     max_outst: jnp.ndarray   # scalar i32: per-core in-flight cap
+    # lossy PHY tables (ISSUE 4; see repro.phy).  Inert unless the
+    # static ``phy_on`` flag compiles the ARQ path; ``rx_hold`` is also
+    # raised (alone) for multicast tables — store-and-forward receivers
+    # (the one-shot all-reduce livelock fix, see module docstring).
+    wl_serv: jnp.ndarray     # [WMAX, WMAX] flit cycles per (src, dst) WI
+    wl_perq: jnp.ndarray     # [WMAX, WMAX] 16-bit PER threshold per link
+    rx_hold: jnp.ndarray     # bool: rx slots hold whole packets
+    max_retx: jnp.ndarray    # scalar i32: ARQ attempt bound per packet
+    phy_seed: jnp.ndarray    # scalar u32: CRC hash seed
+    ctrl_flits: jnp.ndarray  # scalar i32: control-packet length in flits
 
 
 class SimState(NamedTuple):
@@ -234,9 +281,11 @@ class SimState(NamedTuple):
     sent: jnp.ndarray         # [B, V]
     src_of: jnp.ndarray       # [B, V] flat upstream slot feeding this vc (-1)
     mc_id: jnp.ndarray        # [B, V] multicast group id (-1 = unicast)
+    attempt: jnp.ndarray      # [B, V] ARQ attempt of the wireless hop
     pipe: jnp.ndarray         # [B, V, DMAX]
     busy_until: jnp.ndarray   # [B]
     wl_busy_until: jnp.ndarray  # scalar: shared-channel mode
+    pair_busy: jnp.ndarray    # [WMAX, WMAX] per-(src, dst) WI busy-until
     # injection
     q_head: jnp.ndarray       # [N]
     inj_vc: jnp.ndarray       # [N]
@@ -248,6 +297,8 @@ class SimState(NamedTuple):
     phase_flits: jnp.ndarray  # [P] flits delivered while phase was open
     # closed-loop memory dynamics (memory tables)
     rdy: jnp.ndarray          # [N, K] reply birth cycle (NO_PKT = ungated)
+    dead: jnp.ndarray         # [N, K] bool: tombstoned reply slot — its
+    #                           request was ARQ-dropped; injection skips it
     outst: jnp.ndarray        # [N] in-flight memory transactions
     bank_busy: jnp.ndarray    # [Y, CH, BK] bank busy-until cycle
     bank_row: jnp.ndarray     # [Y, CH, BK] open row per bank (-1 = closed)
@@ -274,6 +325,12 @@ class SimState(NamedTuple):
     wl_rx_flits: jnp.ndarray  # wireless flit receptions (multicast: copies)
     awake_cycles: jnp.ndarray
     sleep_cycles: jnp.ndarray
+    # lossy-PHY stats (zero unless phy_on)
+    wl_pair_flits: jnp.ndarray  # [WMAX, WMAX] flit attempts per link
+    wl_fail_flits: jnp.ndarray  # [WMAX, WMAX] flits of CRC-failing attempts
+    wl_pkts: jnp.ndarray      # packets that crossed the air (CRC pass)
+    wl_nacks: jnp.ndarray     # failed attempts (NACK events)
+    pkts_dropped: jnp.ndarray  # packets dropped at max_retx
 
 
 def init_state(B: int, N: int, P: int = 1, K: int = 1, Y: int = 1,
@@ -287,13 +344,16 @@ def init_state(B: int, N: int, P: int = 1, K: int = 1, Y: int = 1,
         out_vc=jnp.full((B, V), -1, i32),
         phase2=jnp.zeros((B, V), bool), rcvd=zBV, sent=zBV,
         src_of=jnp.full((B, V), -1, i32), mc_id=jnp.full((B, V), -1, i32),
+        attempt=jnp.zeros((B, V), i32),
         pipe=jnp.zeros((B, V, DMAX), i32), busy_until=jnp.zeros((B,), i32),
         wl_busy_until=jnp.int32(0),
+        pair_busy=jnp.zeros((WMAX, WMAX), i32),
         q_head=jnp.zeros((N,), i32), inj_vc=jnp.full((N,), -1, i32),
         inj_pushed=jnp.zeros((N,), i32),
         cur_phase=jnp.int32(0), phase_del=jnp.int32(0),
         phase_end=jnp.zeros((P,), i32), phase_flits=jnp.zeros((P,), i32),
-        rdy=jnp.full((N, K), NO_PKT, i32), outst=jnp.zeros((N,), i32),
+        rdy=jnp.full((N, K), NO_PKT, i32),
+        dead=jnp.zeros((N, K), bool), outst=jnp.zeros((N,), i32),
         bank_busy=jnp.zeros((Y, MEM_CH, BK), i32),
         bank_row=jnp.full((Y, MEM_CH, BK), -1, i32),
         outst_peak=jnp.zeros((N,), i32),
@@ -309,6 +369,10 @@ def init_state(B: int, N: int, P: int = 1, K: int = 1, Y: int = 1,
         ctrl_count=jnp.int32(0),
         wl_tx_flits=jnp.int32(0), wl_rx_flits=jnp.int32(0),
         awake_cycles=jnp.int32(0), sleep_cycles=jnp.int32(0),
+        wl_pair_flits=jnp.zeros((WMAX, WMAX), i32),
+        wl_fail_flits=jnp.zeros((WMAX, WMAX), i32),
+        wl_pkts=jnp.int32(0), wl_nacks=jnp.int32(0),
+        pkts_dropped=jnp.int32(0),
     )
 
 
@@ -318,15 +382,17 @@ def _route_fields(ss: SimStatic, at_switch: jnp.ndarray, dst: jnp.ndarray):
     return oo, ss.o_buf[oo], ss.o_wo[oo], ss.o_is_wl[oo], ss.o_is_ej[oo]
 
 
-def make_step(B: int, mem_on: bool = False):
+def make_step(B: int, mem_on: bool = False, phy_on: bool = False):
     """Build the per-cycle transition function (shapes baked in).
 
     Scatter-free: arbitration winners are found by masked min over static
     candidate tables using unique priority codes; delivery uses the
     ``src_of`` inverse map (see module docstring).  ``mem_on`` (static)
     compiles the closed-loop memory path — bank model, reply gating,
-    outstanding-transaction cap, per-slot packet lengths; with it off the
-    program is exactly the open-loop step.
+    outstanding-transaction cap, per-slot packet lengths; ``phy_on``
+    (static) compiles the lossy-channel ARQ path — per-link rates and
+    pacing, CRC retransmission, drops.  With both off the program is
+    exactly the open-loop ideal-channel step.
     """
     NC = B * V
     NCp1 = NC + 1
@@ -395,8 +461,17 @@ def make_step(B: int, mem_on: bool = False):
         free_any_rx = free_mask[rx_ids].any(axis=1)              # [W]
         free_all_mc = jnp.where(member, free_any_rx[None, None, :],
                                 True).all(axis=-1)               # [B, V]
+        # store-and-forward receivers (rx_hold): a slot living in an rx
+        # buffer only claims its downstream VC once the whole packet has
+        # arrived — the CRC check completes at the tail, and a granted
+        # VC then always drains from local flits (livelock fix).
+        Nn0, Kk0 = ss.phases.shape
+        plen0 = ss.lens[jnp.clip(st.pkt_src, 0, Nn0 - 1),
+                        jnp.clip(st.pkt_idx, 0, Kk0 - 1)] \
+            if mem_on else ss.pkt_len
+        hold0_ok = ~(ss.rx_hold & ss.b_is_rx[:, None]) | (rcvd >= plen0)
         need_base = active & (st.out_vc < 0) & ~st.out_is_ej & (occ > 0) \
-            & (st.out_buf < B)
+            & (st.out_buf < B) & hold0_ok
         need_uni = need_base & ~is_mc & has_free_c
         need_mc = need_base & is_mc & free_all_mc
         need = need_uni | need_mc
@@ -467,6 +542,7 @@ def make_step(B: int, mem_on: bool = False):
         out_vc = jnp.where(claimed, -1, st.out_vc)
         phase2 = upd(st.phase2, g(st.phase2) | ss.b_is_rx)
         mc_id = upd(st.mc_id, g(st.mc_id))
+        attempt = jnp.where(claimed, 0, st.attempt)
         rcvd = jnp.where(claimed, 0, rcvd)
         sent = jnp.where(claimed, 0, st.sent)
         src_of = upd(st.src_of, wsrc)
@@ -536,7 +612,25 @@ def make_step(B: int, mem_on: bool = False):
         wl_ok &= ~out_is_wl | wl_ch_free
         # crossbar medium: receivers are not serialized
         link_free |= out_is_wl & ~ss.wl_rx_busy
-        elig = active & (occ > 0) & wl_ok \
+        # store-and-forward receivers: rx slots forward only whole packets
+        hold_ok = ~(ss.rx_hold & ss.b_is_rx[:, None]) | whole
+        if phy_on:
+            # lossy PHY: the sender holds the whole packet (ARQ needs it
+            # for retransmission), the (src, dst) WI pair paces at the
+            # link's selected rate, and the current attempt's CRC
+            # outcome is a deterministic hash — known sender-side, so
+            # failing attempts occupy the channel but deliver nothing.
+            ws_bv = jnp.clip(ss.b_wi, 0, WMAX - 1)[:, None]      # [B, 1]
+            wd_bv = jnp.clip(out_wo, 0, WMAX - 1)                # [B, V]
+            serv_wl_bv = ss.wl_serv[ws_bv, wd_bv]                # [B, V]
+            pb_ok = st.pair_busy[ws_bv, wd_bv] <= t
+            wl_ok &= ~out_is_wl | (whole & pb_ok)
+            # packet uid is padding-independent (pkt_idx < 2^16 always),
+            # so batched and single-point runs draw identical outcomes
+            uid = psrc_c * 65536 + pidx_c
+            fail_bv = _crc_fail(ss.phy_seed, uid, attempt,
+                                ss.wl_perq[ws_bv, wd_bv])        # [B, V]
+        elig = active & (occ > 0) & wl_ok & hold_ok \
             & (out_is_ej | ((out_vc >= 0) & (space > 0) & link_free))
         code2 = jnp.where(elig, score * NCp1 + flat2d, BIGC)
         code2f = code2.reshape(-1)
@@ -603,7 +697,27 @@ def make_step(B: int, mem_on: bool = False):
         is_wl_fwd = fwd & out_is_wl
 
         sent = sent + fwd.astype(i32)
-        tail = fwd & (sent >= plen_bv)
+        if phy_on:
+            # CRC check on the tail of every air attempt: NACK rewinds
+            # the sender (the whole packet is still buffered), the
+            # bounded-ARQ loser is dropped — sender slot and the claimed
+            # receiver VC are freed below, nothing was delivered.
+            first_wl_phy = is_wl_fwd & (sent == 1)   # pre-rewind header
+            raw_tail = fwd & (sent >= plen_bv)
+            fail_tail = raw_tail & out_is_wl & fail_bv
+            retx_m = fail_tail & (attempt + 1 < ss.max_retx)
+            drop = fail_tail & ~retx_m
+            tail = raw_tail & ~fail_tail
+            sent = jnp.where(retx_m, sent - plen_bv, sent)
+            attempt = jnp.where(retx_m, attempt + 1, attempt)
+            wl_nacks = st.wl_nacks + post * fail_tail.sum().astype(i32)
+            wl_pkts = st.wl_pkts \
+                + post * (tail & out_is_wl).sum().astype(i32)
+            pkts_dropped = st.pkts_dropped + post * drop.sum().astype(i32)
+        else:
+            tail = fwd & (sent >= plen_bv)
+            wl_nacks, wl_pkts = st.wl_nacks, st.wl_pkts
+            pkts_dropped = st.pkts_dropped
         ej = fwd & out_is_ej
 
         # ejection stats
@@ -632,7 +746,7 @@ def make_step(B: int, mem_on: bool = False):
         phase_del = jnp.where(complete, 0, phase_del)
 
         # ---- closed-loop memory: bank model + reply gating (mem tables)
-        rdy, outst = st.rdy, st.outst
+        rdy, outst, dead = st.rdy, st.outst, st.dead
         bank_busy, bank_row = st.bank_busy, st.bank_row
         amat_sum, amat_pkts = st.amat_sum, st.amat_pkts
         mem_reads, mem_writes = st.mem_reads, st.mem_writes
@@ -716,11 +830,21 @@ def make_step(B: int, mem_on: bool = False):
         # non-eject: deliver downstream via the src_of inverse map — each
         # target (buffer, vc) gathers from the unique upstream slot feeding
         # it (identity-checked against out_buf/out_vc to survive slot reuse)
-        first_wl = is_wl_fwd & (sent == 1)   # header burst => control packet
-        lat_t = jnp.where(out_is_wl, ss.lat_wl, ss.b_lat[ob_c]) \
-            + jnp.where(first_wl & ~ss.wl_rx_busy, ss.ctrl_cycles, 0)
-        serv_t = jnp.where(out_is_wl, ss.serv_wl, ss.b_serv[ob_c]) \
-            + jnp.where(first_wl, ss.ctrl_cycles, 0)
+        if phy_on:
+            # per-link rate: serialization and control-packet time follow
+            # the (src, dst) WI pair's selected rate from the PHY table
+            first_wl = first_wl_phy
+            ctrl_bv = jnp.maximum(1, ss.ctrl_flits * serv_wl_bv)
+            lat_wl_bv = (ss.lat_wl - ss.serv_wl) + serv_wl_bv
+        else:
+            first_wl = is_wl_fwd & (sent == 1)   # header => control packet
+            ctrl_bv = ss.ctrl_cycles
+            lat_wl_bv = ss.lat_wl
+            serv_wl_bv = ss.serv_wl
+        lat_t = jnp.where(out_is_wl, lat_wl_bv, ss.b_lat[ob_c]) \
+            + jnp.where(first_wl & ~ss.wl_rx_busy, ctrl_bv, 0)
+        serv_t = jnp.where(out_is_wl, serv_wl_bv, ss.b_serv[ob_c]) \
+            + jnp.where(first_wl, ctrl_bv, 0)
 
         sv = jnp.clip(src_of, 0, NC - 1)
         # unicast identity: the upstream slot still targets me at my VC.
@@ -733,12 +857,20 @@ def make_step(B: int, mem_on: bool = False):
         ident_mc = (src_of >= 0) & is_mc_f[sv] & ss.b_is_rx[:, None] \
             & (mc_id >= 0) & (mc_id.reshape(-1)[sv] == mc_id)
         ident = ident_uni | ident_mc
-        incoming = ident & fwd.reshape(-1)[sv]                   # [B, V]
+        incoming_any = ident & fwd.reshape(-1)[sv]               # [B, V]
+        if phy_on:
+            # failing attempts occupy the channel/receiver but deliver
+            # nothing; the dropped packet's receiver VC is freed below
+            deliver = fwd & ~(out_is_wl & fail_bv)
+            incoming = ident & deliver.reshape(-1)[sv]
+            rx_dropped = ident & drop.reshape(-1)[sv]
+        else:
+            incoming = incoming_any
         d_in = jnp.clip(lat_t.reshape(-1)[sv] - 1, 0, DMAX - 1)
         pipe = pipe + (incoming[:, :, None]
                        & (jnp.arange(DMAX) == d_in[:, :, None])).astype(i32)
         # crossbar: wireless winners do not serialize the receiver
-        ser_in = incoming & (~out_is_wl.reshape(-1)[sv] | ss.wl_rx_busy)
+        ser_in = incoming_any & (~out_is_wl.reshape(-1)[sv] | ss.wl_rx_busy)
         serv_in = serv_t.reshape(-1)[sv]
         busy_until = jnp.where(
             ser_in.any(axis=1),
@@ -758,14 +890,70 @@ def make_step(B: int, mem_on: bool = False):
         wl_tx_flits = st.wl_tx_flits + post * is_wl_fwd.sum().astype(i32)
         wl_rx_flits = st.wl_rx_flits \
             + post * (incoming & ss.b_is_rx[:, None]).sum().astype(i32)
+        if phy_on:
+            # per-(src WI, dst WI) pacing + energy counters, scatter-free:
+            # the (sub-channel, receiver) air winner is unique, so each
+            # pair sees at most one transmission per cycle — a masked
+            # one-assignment over the [W, W] grid (cf. the memory path's
+            # per-(stack, channel) ejection winners).
+            ws_ids = jnp.arange(WMAX, dtype=i32)[:, None]        # [W, 1]
+            r_ids = jnp.clip(ws_ids % rxw, 0, RXWMAX - 1)
+            w2 = win2_wl[r_ids, warr[None, :]]                   # [W, W]
+            v2 = w2 < BIGC
+            slot2 = jnp.where(v2, w2 % NCp1, 0)
+            txp = v2 & fwd.reshape(-1)[slot2] \
+                & out_is_wl.reshape(-1)[slot2] \
+                & (ss.b_wi[slot2 // V] == ws_ids)
+            failp = txp & fail_bv.reshape(-1)[slot2]
+            pair_busy = jnp.where(txp, t + serv_t.reshape(-1)[slot2],
+                                  st.pair_busy)
+            wl_pair_flits = st.wl_pair_flits + post * txp.astype(i32)
+            wl_fail_flits = st.wl_fail_flits + post * failp.astype(i32)
+            if mem_on:
+                # ARQ drop of a memory request/reply: the sender observes
+                # the drop (instant NACK), so the requester's outstanding
+                # window is credited back immediately, and a dropped
+                # *request's* pre-allocated reply slot is tombstoned so
+                # the stack's in-order reply channel skips it instead of
+                # wedging behind a birth that will never come.  Every
+                # drop is an air-pair winner, so the [W, W] grid sees
+                # each one exactly once (gather style; the reference
+                # engine scatters the same updates).
+                d_on = txp & drop.reshape(-1)[slot2]             # [W, W]
+                nd = jnp.clip(pkt_src.reshape(-1)[slot2], 0, Nn - 1)
+                kd = jnp.clip(pkt_idx.reshape(-1)[slot2], 0, Kk - 1)
+                opd = jnp.where(d_on, ss.mem_op[nd, kd], 0)
+                is_rqd = (opd == 1) | (opd == 2)
+                is_repd = (opd == 3) | (opd == 4)
+                tgt_d = jnp.where(
+                    is_rqd, nd,
+                    jnp.where(is_repd,
+                              jnp.clip(ss.req_src[nd, kd], 0, Nn - 1), -1))
+                Nar = jnp.arange(Nn, dtype=i32)
+                outst = outst - (tgt_d[None] == Nar[:, None, None]) \
+                    .sum(axis=(1, 2)).astype(i32)
+                rrd = jnp.clip(ss.reply_row[nd, kd], 0, Nn - 1)
+                rsd = jnp.clip(ss.reply_slot[nd, kd], 0, Kk - 1)
+                dflat = jnp.where(is_rqd, rrd * Kk + rsd, -1).reshape(-1)
+                dead = dead | (jnp.arange(Nn * Kk, dtype=i32)[:, None]
+                               == dflat[None]).any(1).reshape(Nn, Kk)
+        else:
+            pair_busy = st.pair_busy
+            wl_pair_flits = st.wl_pair_flits
+            wl_fail_flits = st.wl_fail_flits
         # the feeding packet's tail has been sent: the link is quiet again
         src_of = jnp.where(ident & tail.reshape(-1)[sv], -1, src_of)
 
-        # free VCs whose tail left
-        pkt_src = jnp.where(tail, -1, pkt_src)
-        out_vc = jnp.where(tail, -1, out_vc)
-        out_is_wl = jnp.where(tail, False, out_is_wl)
-        out_is_ej = jnp.where(tail, False, out_is_ej)
+        # free VCs whose tail left (phy: also ARQ-dropped senders and
+        # the receiver VCs their claims held)
+        freed = tail
+        if phy_on:
+            freed = tail | drop | rx_dropped
+            src_of = jnp.where(rx_dropped, -1, src_of)
+        pkt_src = jnp.where(freed, -1, pkt_src)
+        out_vc = jnp.where(freed, -1, out_vc)
+        out_is_wl = jnp.where(freed, False, out_is_wl)
+        out_is_ej = jnp.where(freed, False, out_is_ej)
 
         # ---- 3. injection -------------------------------------------------
         N, K = ss.births.shape
@@ -820,12 +1008,18 @@ def make_step(B: int, mem_on: bool = False):
         out_vc = jnp.where(icl, -1, out_vc)
         phase2 = jnp.where(icl, False, phase2)
         mc_id = iupd(mc_id, mcv_n)
+        attempt = jnp.where(icl, 0, attempt)
         rcvd = jnp.where(icl, 0, rcvd)
         sent = jnp.where(icl, 0, sent)
         src_of = jnp.where(icl, -1, src_of)
         inj_vc = jnp.where(can_new, ivc, st.inj_vc)
         inj_pushed = jnp.where(can_new, 0, st.inj_pushed)
         q_head = st.q_head + can_new.astype(i32)
+        if mem_on and phy_on:
+            # tombstoned reply slots (request ARQ-dropped) never birth:
+            # advance past them so the in-order channel keeps flowing
+            skip = (st.inj_vc < 0) & (st.q_head < K) & dead[n_ar, qh]
+            q_head = q_head + skip.astype(i32)
         outst_peak = st.outst_peak
         if mem_on:
             outst = outst + (can_new & is_tx).astype(i32)
@@ -862,11 +1056,13 @@ def make_step(B: int, mem_on: bool = False):
             out_o=out_o, out_buf=out_buf, out_wo=out_wo, out_is_wl=out_is_wl,
             out_is_ej=out_is_ej, out_vc=out_vc, phase2=phase2,
             rcvd=rcvd, sent=sent, src_of=src_of, mc_id=mc_id,
-            pipe=pipe, busy_until=busy_until, wl_busy_until=wl_busy_until,
+            attempt=attempt, pipe=pipe, busy_until=busy_until,
+            wl_busy_until=wl_busy_until, pair_busy=pair_busy,
             q_head=q_head, inj_vc=inj_vc, inj_pushed=inj_pushed,
             cur_phase=cur_phase, phase_del=phase_del, phase_end=phase_end,
             phase_flits=phase_flits,
-            rdy=rdy, outst=outst, bank_busy=bank_busy, bank_row=bank_row,
+            rdy=rdy, dead=dead, outst=outst,
+            bank_busy=bank_busy, bank_row=bank_row,
             outst_peak=outst_peak, amat_sum=amat_sum, amat_pkts=amat_pkts,
             mem_reads=mem_reads, mem_writes=mem_writes,
             mem_row_hits=mem_row_hits, mem_q_sum=mem_q_sum,
@@ -876,14 +1072,16 @@ def make_step(B: int, mem_on: bool = False):
             count_switch=count_switch, ctrl_count=ctrl_count,
             wl_tx_flits=wl_tx_flits, wl_rx_flits=wl_rx_flits,
             awake_cycles=awake_cycles, sleep_cycles=sleep_cycles,
+            wl_pair_flits=wl_pair_flits, wl_fail_flits=wl_fail_flits,
+            wl_pkts=wl_pkts, wl_nacks=wl_nacks, pkts_dropped=pkts_dropped,
         )
 
     return step
 
 
 def _scan_point(ss: SimStatic, st: SimState, cycles: int, B: int,
-                mem_on: bool) -> SimState:
-    step = make_step(B, mem_on)
+                mem_on: bool, phy_on: bool = False) -> SimState:
+    step = make_step(B, mem_on, phy_on)
 
     def body(carry, t):
         return step(ss, carry, t), None
@@ -892,15 +1090,15 @@ def _scan_point(ss: SimStatic, st: SimState, cycles: int, B: int,
     return final
 
 
-@functools.partial(jax.jit, static_argnums=(2, 3, 4))
+@functools.partial(jax.jit, static_argnums=(2, 3, 4, 5))
 def _run_one(ss: SimStatic, st: SimState, cycles: int, B: int,
-             mem_on: bool = False) -> SimState:
-    return _scan_point(ss, st, cycles, B, mem_on)
+             mem_on: bool = False, phy_on: bool = False) -> SimState:
+    return _scan_point(ss, st, cycles, B, mem_on, phy_on)
 
 
-@functools.partial(jax.jit, static_argnums=(2, 3, 4))
+@functools.partial(jax.jit, static_argnums=(2, 3, 4, 5))
 def _run_mapped(ss: SimStatic, st: SimState, cycles: int, B: int,
-                mem_on: bool = False) -> SimState:
+                mem_on: bool = False, phy_on: bool = False) -> SimState:
     """Sequentially map the per-point scan over a stacked batch.
 
     ``lax.map`` (not ``vmap``): each point's computation is the *identical*
@@ -910,15 +1108,17 @@ def _run_mapped(ss: SimStatic, st: SimState, cycles: int, B: int,
     the whole group and from sharding groups across devices (`_run_pmapped`).
     """
     return jax.lax.map(
-        lambda args: _scan_point(args[0], args[1], cycles, B, mem_on),
+        lambda args: _scan_point(args[0], args[1], cycles, B, mem_on,
+                                 phy_on),
         (ss, st))
 
 
-@functools.partial(jax.pmap, static_broadcasted_argnums=(2, 3, 4))
+@functools.partial(jax.pmap, static_broadcasted_argnums=(2, 3, 4, 5))
 def _run_pmapped(ss: SimStatic, st: SimState, cycles: int, B: int,
-                 mem_on: bool = False) -> SimState:
+                 mem_on: bool = False, phy_on: bool = False) -> SimState:
     return jax.lax.map(
-        lambda args: _scan_point(args[0], args[1], cycles, B, mem_on),
+        lambda args: _scan_point(args[0], args[1], cycles, B, mem_on,
+                                 phy_on),
         (ss, st))
 
 
@@ -939,14 +1139,17 @@ class PackedSim:
     sim: SimParams
     dims: dict = dataclasses.field(default_factory=dict)
     mem_on: bool = False      # closed-loop memory path compiled in
+    phy_on: bool = False      # lossy-channel ARQ path compiled in
+    phy_link: object = None   # phy.PhyLinkInfo (host-side, for metrics)
 
     def shape_key(self) -> tuple:
         """Hashable signature of every padded array shape (batch grouping).
 
-        ``mem_on`` is part of the key: it selects a different compiled
-        step, so open- and closed-loop points never share a batch.
+        ``mem_on``/``phy_on`` are part of the key: each selects a
+        different compiled step, so open-loop, closed-loop and
+        lossy-channel points never share a batch.
         """
-        return (("mem_on", self.mem_on),) + tuple(
+        return (("mem_on", self.mem_on), ("phy_on", self.phy_on)) + tuple(
             (k, np.shape(v)) for k, v in self.ss._asdict().items())
 
 
@@ -995,14 +1198,20 @@ def pack_dims(topo: Topology, tt: TrafficTable,
 def pack(topo: Topology, rt: RoutingTables, tt: TrafficTable,
          phy: PhyParams, sim: SimParams,
          b_bucket: int = 64, s_bucket: int = 8, r_bucket: int = 64,
-         k_bucket: int = 32, floors: dict | None = None) -> PackedSim:
+         k_bucket: int = 32, floors: dict | None = None,
+         phy_spec=None) -> PackedSim:
     """Pack a (topology, routing, traffic) point into padded device arrays.
 
     ``floors`` maps dim names (``B``, ``S``, ``R``, ``K``, ``CS``, ``CR``)
     to minimum padded sizes, letting heterogeneous points be harmonized
     onto one bucket shape so they can share an XLA compile *and* a batch
     (see ``sweep.run_sweep_batched``).  Padding is semantically inert.
+
+    ``phy_spec`` (a ``phy.PhySweepSpec``) turns on the lossy-channel ARQ
+    path on fabrics with wireless interfaces; wireline fabrics (and
+    ``phy_spec=None``) run the exact ideal-channel program.
     """
+    from repro.phy.rates import pack_link_state
     fl = floors or {}
     Lw = topo.n_links
     n_inj = tt.n_sources
@@ -1082,6 +1291,13 @@ def pack(topo: Topology, rt: RoutingTables, tt: TrafficTable,
         for b in range(rx0):
             if int(b_dst[b]) in wi_set:
                 b_depth[b] = max(int(b_depth[b]), phy.pkt_flits)
+
+    # lossy PHY (ISSUE 4): per-(src, dst)-WI rate/PER tables; inert when
+    # the spec is absent or the fabric has no wireless medium.  The
+    # shared helper mutates b_depth/b_epb (store-and-forward deepening,
+    # rx epb zeroing) identically for both engines.
+    pli, phy_on, rx_hold = pack_link_state(
+        topo, phy, tt, phy_spec, b_dst, b_depth, b_epb, rx0)
 
     # arbitration candidate tables: buffers feeding each switch ...
     in_bufs: list[list[int]] = [[] for _ in range(S)]
@@ -1230,12 +1446,20 @@ def pack(topo: Topology, rt: RoutingTables, tt: TrafficTable,
         t_row_hit=jnp.int32(dram.t_row_hit),
         t_row_miss=jnp.int32(dram.t_row_miss),
         max_outst=jnp.int32(max_outst),
+        wl_serv=jnp.asarray(pli.serv if phy_on
+                            else np.ones((WMAX, WMAX), np.int32)),
+        wl_perq=jnp.asarray(pli.perq if phy_on
+                            else np.zeros((WMAX, WMAX), np.int32)),
+        rx_hold=jnp.asarray(rx_hold),
+        max_retx=jnp.int32(phy_spec.max_retx if phy_on else 1),
+        phy_seed=jnp.uint32(phy_spec.seed if phy_on else 0),
+        ctrl_flits=jnp.int32(phy.ctrl_packet_flits),
     )
     dims = {"B": B, "S": S, "R": R, "K": K, "CS": CS, "CR": CR,
             "M": M, "P": P, "Y": Y, "BK": BK}
     return PackedSim(ss=ss, B=B, n_cores=topo.n_cores, Lw=Lw,
                      n_inj=n_inj, topo=topo, rt=rt, phy=phy, sim=sim,
-                     dims=dims, mem_on=mem_on)
+                     dims=dims, mem_on=mem_on, phy_on=phy_on, phy_link=pli)
 
 
 # --------------------------------------------------------------------------
@@ -1288,9 +1512,11 @@ def run_batch(pss: Sequence[PackedSim], cycles: int | None = None,
     B = pss[0].B
     sdims = _state_dims(pss[0])
     mem_on = pss[0].mem_on
+    phy_on = pss[0].phy_on
     G = len(pss)
     if G == 1:
-        out = _run_one(pss[0].ss, init_state(*sdims), cycles, B, mem_on)
+        out = _run_one(pss[0].ss, init_state(*sdims), cycles, B, mem_on,
+                       phy_on)
         out = jax.tree_util.tree_map(lambda x: x[None], out)
         return jax.block_until_ready(out)
     ss = _tree_stack([ps.ss for ps in pss])
@@ -1309,11 +1535,11 @@ def run_batch(pss: Sequence[PackedSim], cycles: int | None = None,
             lambda x: x.reshape((D, Gp // D) + x.shape[1:]), ss)
         st_sh = jax.tree_util.tree_map(
             lambda x: x.reshape((D, Gp // D) + x.shape[1:]), st)
-        out = _run_pmapped(shard, st_sh, cycles, B, mem_on)
+        out = _run_pmapped(shard, st_sh, cycles, B, mem_on, phy_on)
         out = jax.tree_util.tree_map(
             lambda x: x.reshape((Gp,) + x.shape[2:])[:G], out)
     else:
-        out = _run_mapped(ss, st, cycles, B, mem_on)
+        out = _run_mapped(ss, st, cycles, B, mem_on, phy_on)
     return jax.block_until_ready(out)
 
 
@@ -1322,4 +1548,4 @@ def run(ps: PackedSim, cycles: int | None = None) -> SimState:
     cycles = cycles or ps.sim.cycles
     st = init_state(*_state_dims(ps))
     return jax.block_until_ready(
-        _run_one(ps.ss, st, cycles, ps.B, ps.mem_on))
+        _run_one(ps.ss, st, cycles, ps.B, ps.mem_on, ps.phy_on))

@@ -25,6 +25,14 @@ instead locates the unique per-(stack, channel) and per-(switch, way)
 ejection winners through its candidate tables and updates with masked
 elementwise min — two independent formulations, pinned bitwise-equal.
 
+Semantics extension (ISSUE 4): the lossy-channel PHY — per-(src, dst)-WI
+rates/PER, CRC retransmission with bounded attempts, per-pair pacing and
+drop accounting — plus store-and-forward receivers (``rx_hold``, also
+the one-shot multicast all-reduce livelock fix) were added to BOTH
+engines: here with ``.at[].set/.add`` scatters over the ``[WMAX, WMAX]``
+pair grids, in ``simulator.py`` via the air-winner tables — two
+independent formulations, pinned bitwise-equal.
+
 Original module docstring follows.
 
 Cycle-accurate flit-level simulator for multichip NoCs (paper §IV).
@@ -90,6 +98,7 @@ from repro.core.routing import RoutingTables
 from repro.core.topology import Topology
 from repro.core.traffic import NO_PKT, TrafficTable
 from repro.memory.model import MEM_CH, DEFAULT_DRAM
+from repro.phy.retx import crc_fail as _crc_fail
 
 V = 8            # virtual channels per port (paper §IV)
 DEPTH = 16       # buffer depth in flits (paper §IV)
@@ -160,6 +169,13 @@ class SimStatic(NamedTuple):
     t_row_hit: jnp.ndarray   # scalar i32
     t_row_miss: jnp.ndarray  # scalar i32
     max_outst: jnp.ndarray   # scalar i32
+    # lossy PHY tables (ISSUE 4; see simulator.py)
+    wl_serv: jnp.ndarray     # [WMAX, WMAX]
+    wl_perq: jnp.ndarray     # [WMAX, WMAX]
+    rx_hold: jnp.ndarray     # bool
+    max_retx: jnp.ndarray    # scalar i32
+    phy_seed: jnp.ndarray    # scalar u32
+    ctrl_flits: jnp.ndarray  # scalar i32
 
 
 class SimState(NamedTuple):
@@ -181,9 +197,11 @@ class SimState(NamedTuple):
     mc_src: jnp.ndarray       # [B, V] engine-internal: flat sender slot
     #                           feeding this multicast copy (-1); plays the
     #                           role simulator.py's src_of plays for copies
+    attempt: jnp.ndarray      # [B, V] ARQ attempt of the wireless hop
     pipe: jnp.ndarray         # [B, V, DMAX]
     busy_until: jnp.ndarray   # [B]
     wl_busy_until: jnp.ndarray  # scalar: shared-channel mode
+    pair_busy: jnp.ndarray    # [WMAX, WMAX] per-(src, dst) WI busy-until
     # injection
     q_head: jnp.ndarray       # [N]
     inj_vc: jnp.ndarray       # [N]
@@ -196,6 +214,7 @@ class SimState(NamedTuple):
     # closed-loop memory dynamics + stats (names match simulator.py so the
     # differential tests compare them field by field)
     rdy: jnp.ndarray          # [N, K]
+    dead: jnp.ndarray         # [N, K] bool: tombstoned reply slots
     outst: jnp.ndarray        # [N]
     bank_busy: jnp.ndarray    # [Y, CH, BK]
     bank_row: jnp.ndarray     # [Y, CH, BK]
@@ -221,6 +240,12 @@ class SimState(NamedTuple):
     wl_rx_flits: jnp.ndarray
     awake_cycles: jnp.ndarray
     sleep_cycles: jnp.ndarray
+    # lossy-PHY stats (zero unless phy_on; names match simulator.py)
+    wl_pair_flits: jnp.ndarray  # [WMAX, WMAX]
+    wl_fail_flits: jnp.ndarray  # [WMAX, WMAX]
+    wl_pkts: jnp.ndarray
+    wl_nacks: jnp.ndarray
+    pkts_dropped: jnp.ndarray
 
 
 def init_state(B: int, N: int, P: int = 1, K: int = 1, Y: int = 1,
@@ -234,13 +259,16 @@ def init_state(B: int, N: int, P: int = 1, K: int = 1, Y: int = 1,
         out_vc=jnp.full((B, V), -1, i32),
         phase2=jnp.zeros((B, V), bool), rcvd=zBV, sent=zBV,
         mc_id=jnp.full((B, V), -1, i32), mc_src=jnp.full((B, V), -1, i32),
+        attempt=jnp.zeros((B, V), i32),
         pipe=jnp.zeros((B, V, DMAX), i32), busy_until=jnp.zeros((B,), i32),
         wl_busy_until=jnp.int32(0),
+        pair_busy=jnp.zeros((WMAX, WMAX), i32),
         q_head=jnp.zeros((N,), i32), inj_vc=jnp.full((N,), -1, i32),
         inj_pushed=jnp.zeros((N,), i32),
         cur_phase=jnp.int32(0), phase_del=jnp.int32(0),
         phase_end=jnp.zeros((P,), i32), phase_flits=jnp.zeros((P,), i32),
-        rdy=jnp.full((N, K), NO_PKT, i32), outst=jnp.zeros((N,), i32),
+        rdy=jnp.full((N, K), NO_PKT, i32),
+        dead=jnp.zeros((N, K), bool), outst=jnp.zeros((N,), i32),
         bank_busy=jnp.zeros((Y, MEM_CH, BK), i32),
         bank_row=jnp.full((Y, MEM_CH, BK), -1, i32),
         outst_peak=jnp.zeros((N,), i32),
@@ -256,6 +284,10 @@ def init_state(B: int, N: int, P: int = 1, K: int = 1, Y: int = 1,
         ctrl_count=jnp.int32(0),
         wl_tx_flits=jnp.int32(0), wl_rx_flits=jnp.int32(0),
         awake_cycles=jnp.int32(0), sleep_cycles=jnp.int32(0),
+        wl_pair_flits=jnp.zeros((WMAX, WMAX), i32),
+        wl_fail_flits=jnp.zeros((WMAX, WMAX), i32),
+        wl_pkts=jnp.int32(0), wl_nacks=jnp.int32(0),
+        pkts_dropped=jnp.int32(0),
     )
 
 
@@ -265,11 +297,13 @@ def _route_fields(ss: SimStatic, at_switch: jnp.ndarray, dst: jnp.ndarray):
     return oo, ss.o_buf[oo], ss.o_wo[oo], ss.o_is_wl[oo], ss.o_is_ej[oo]
 
 
-def make_step(B: int, Wout: int, RXW: int = 1, mem_on: bool = False):
+def make_step(B: int, Wout: int, RXW: int = 1, mem_on: bool = False,
+              phy_on: bool = False):
     """Build the per-cycle transition function (shapes baked in).
 
     ``mem_on`` (static) compiles the closed-loop memory path in scatter
-    style; off, the program is exactly the open-loop step.
+    style; ``phy_on`` the lossy-channel ARQ path; with both off the
+    program is exactly the ideal open-loop step.
     """
     NC = B * V
     BIG = jnp.int32(4 * NC)
@@ -321,8 +355,15 @@ def make_step(B: int, Wout: int, RXW: int = 1, mem_on: bool = False):
         free_any_rx = free_mask[rx_ids].any(axis=1)              # [W]
         free_all_mc = jnp.where(member, free_any_rx[None, None, :],
                                 True).all(axis=-1)               # [B, V]
+        # store-and-forward receivers (rx_hold; see simulator.py): rx
+        # slots claim their downstream VC only with the whole packet in
+        Nn0, Kk0 = ss.phases.shape
+        plen0 = ss.lens[jnp.clip(st.pkt_src, 0, Nn0 - 1),
+                        jnp.clip(st.pkt_idx, 0, Kk0 - 1)] \
+            if mem_on else ss.pkt_len
+        hold0_ok = ~(ss.rx_hold & ss.b_is_rx[:, None]) | (rcvd >= plen0)
         need_base = active & (st.out_vc < 0) & ~st.out_is_ej & (occ > 0) \
-            & (st.out_buf < B)
+            & (st.out_buf < B) & hold0_ok
         need_uni = need_base & ~is_mc & has_free_c
         need_mc = need_base & is_mc & free_all_mc
         score_all = (flat2d - rot) % NC
@@ -365,6 +406,7 @@ def make_step(B: int, Wout: int, RXW: int = 1, mem_on: bool = False):
         phase2 = claim(st.phase2, st.phase2 | tgt_rx)
         mc_id = claim(st.mc_id, st.mc_id)
         mc_src = claim(st.mc_src, jnp.full((B, V), -1, i32))
+        attempt = claim(st.attempt, jnp.zeros((B, V), i32))
         rcvd = claim(rcvd, jnp.zeros((B, V), i32))
         sent = claim(st.sent, jnp.zeros((B, V), i32))
         # upstream learns its allocated VC
@@ -407,6 +449,7 @@ def make_step(B: int, Wout: int, RXW: int = 1, mem_on: bool = False):
         phase2 = jnp.where(icl_mc, True, phase2)
         mc_id = mupd(mc_id, gmc(st.mc_id))
         mc_src = mupd(mc_src, sw_b)
+        attempt = jnp.where(icl_mc, 0, attempt)
         rcvd = jnp.where(icl_mc, 0, rcvd)
         sent = jnp.where(icl_mc, 0, sent)
         # multicast sender: "granted" sentinel (delivery is receiver-side)
@@ -468,7 +511,21 @@ def make_step(B: int, Wout: int, RXW: int = 1, mem_on: bool = False):
         wl_ok &= ~out_is_wl | wl_ch_free
         # crossbar medium: receivers are not serialized
         link_free |= out_is_wl & ~ss.wl_rx_busy
-        elig = active & (occ > 0) & wl_ok \
+        # store-and-forward receivers: rx slots forward only whole packets
+        hold_ok = ~(ss.rx_hold & ss.b_is_rx[:, None]) | whole
+        if phy_on:
+            # lossy PHY (see simulator.py): ARQ senders hold the whole
+            # packet, pairs pace at the link rate, CRC outcome is the
+            # deterministic (seed, packet, attempt) hash
+            ws_bv = jnp.clip(ss.b_wi, 0, WMAX - 1)[:, None]      # [B, 1]
+            wd_bv = jnp.clip(out_buf - ss.rx0, 0, WMAX - 1)      # [B, V]
+            serv_wl_bv = ss.wl_serv[ws_bv, wd_bv]                # [B, V]
+            pb_ok = st.pair_busy[ws_bv, wd_bv] <= t
+            wl_ok &= ~out_is_wl | (whole & pb_ok)
+            uid = psrc_c * 65536 + pidx_c
+            fail_bv = _crc_fail(ss.phy_seed, uid, attempt,
+                                ss.wl_perq[ws_bv, wd_bv])        # [B, V]
+        elig = active & (occ > 0) & wl_ok & hold_ok \
             & (out_is_ej | ((out_vc >= 0) & (space > 0) & link_free))
         # multi-channel ejection: memory stacks sink `b_ej_ways` flits/cycle
         # (4-channel DRAM stacks, paper SIV); cores sink one.  The way is
@@ -523,7 +580,25 @@ def make_step(B: int, Wout: int, RXW: int = 1, mem_on: bool = False):
         is_wl_fwd = fwd & out_is_wl
 
         sent = sent + fwd.astype(i32)
-        tail = fwd & (sent >= plen_bv)
+        if phy_on:
+            # CRC on the tail of every air attempt (see simulator.py):
+            # NACK rewinds the sender, bounded-ARQ losers are dropped
+            first_wl_phy = is_wl_fwd & (sent == 1)   # pre-rewind header
+            raw_tail = fwd & (sent >= plen_bv)
+            fail_tail = raw_tail & out_is_wl & fail_bv
+            retx_m = fail_tail & (attempt + 1 < ss.max_retx)
+            drop = fail_tail & ~retx_m
+            tail = raw_tail & ~fail_tail
+            sent = jnp.where(retx_m, sent - plen_bv, sent)
+            attempt = jnp.where(retx_m, attempt + 1, attempt)
+            wl_nacks = st.wl_nacks + post * fail_tail.sum().astype(i32)
+            wl_pkts = st.wl_pkts \
+                + post * (tail & out_is_wl).sum().astype(i32)
+            pkts_dropped = st.pkts_dropped + post * drop.sum().astype(i32)
+        else:
+            tail = fwd & (sent >= plen_bv)
+            wl_nacks, wl_pkts = st.wl_nacks, st.wl_pkts
+            pkts_dropped = st.pkts_dropped
         ej = fwd & out_is_ej
         nej = fwd & ~out_is_ej
 
@@ -552,7 +627,7 @@ def make_step(B: int, Wout: int, RXW: int = 1, mem_on: bool = False):
         phase_del = jnp.where(complete, 0, phase_del)
 
         # ---- closed-loop memory: bank model + reply gating, scatter style
-        rdy, outst = st.rdy, st.outst
+        rdy, outst, dead = st.rdy, st.outst, st.dead
         bank_busy, bank_row = st.bank_busy, st.bank_row
         amat_sum, amat_pkts = st.amat_sum, st.amat_pkts
         mem_reads, mem_writes = st.mem_reads, st.mem_writes
@@ -621,12 +696,23 @@ def make_step(B: int, Wout: int, RXW: int = 1, mem_on: bool = False):
             outst = outst.at[rq_t.reshape(-1)].add(-1, mode="drop")
 
         # non-eject: schedule arrival downstream, occupy link / rx / channel
-        first_wl = is_wl_fwd & (sent == 1)   # header burst => control packet
-        lat_t = jnp.where(out_is_wl, ss.lat_wl, ss.b_lat[ob_c]) \
-            + jnp.where(first_wl & ~ss.wl_rx_busy, ss.ctrl_cycles, 0)
-        serv_t = jnp.where(out_is_wl, ss.serv_wl, ss.b_serv[ob_c]) \
-            + jnp.where(first_wl, ss.ctrl_cycles, 0)
-        nb_t = jnp.where(nej & ~is_mc2, out_buf, B).reshape(-1)
+        if phy_on:
+            first_wl = first_wl_phy
+            ctrl_bv = jnp.maximum(1, ss.ctrl_flits * serv_wl_bv)
+            lat_wl_bv = (ss.lat_wl - ss.serv_wl) + serv_wl_bv
+            # failing attempts occupy the channel but deliver nothing
+            nej_del = nej & ~(out_is_wl & fail_bv)
+        else:
+            first_wl = is_wl_fwd & (sent == 1)   # header => control packet
+            ctrl_bv = ss.ctrl_cycles
+            lat_wl_bv = ss.lat_wl
+            serv_wl_bv = ss.serv_wl
+            nej_del = nej
+        lat_t = jnp.where(out_is_wl, lat_wl_bv, ss.b_lat[ob_c]) \
+            + jnp.where(first_wl & ~ss.wl_rx_busy, ctrl_bv, 0)
+        serv_t = jnp.where(out_is_wl, serv_wl_bv, ss.b_serv[ob_c]) \
+            + jnp.where(first_wl, ctrl_bv, 0)
+        nb_t = jnp.where(nej_del & ~is_mc2, out_buf, B).reshape(-1)
         nv_t = ovc_c.reshape(-1)
         nd_t = jnp.clip(lat_t - 1, 0, DMAX - 1).reshape(-1)
         pipe = pipe.at[nb_t, nv_t, nd_t].add(1, mode="drop")
@@ -654,7 +740,7 @@ def make_step(B: int, Wout: int, RXW: int = 1, mem_on: bool = False):
             is_wl_fwd.any(),
             t + (jnp.where(is_wl_fwd, serv_t, 0)).max(), st.wl_busy_until)
         counts_into = st.counts_into.at[
-            jnp.where(nej & ~is_mc2 & (post > 0), out_buf,
+            jnp.where(nej_del & ~is_mc2 & (post > 0), out_buf,
                       B).reshape(-1)].add(1, mode="drop")
         # broadcast energy is paid once: count only the primary member copy
         prim_buf = ss.rx0 + ss.mc_prim[mcid_c2]                  # [B, V]
@@ -664,15 +750,64 @@ def make_step(B: int, Wout: int, RXW: int = 1, mem_on: bool = False):
         ctrl_count = st.ctrl_count + post * first_wl.sum().astype(i32)
         wl_tx_flits = st.wl_tx_flits + post * is_wl_fwd.sum().astype(i32)
         wl_rx_flits = st.wl_rx_flits + post * (
-            (nej & ~is_mc2 & out_is_wl).sum() + inc_mc.sum()).astype(i32)
+            (nej_del & ~is_mc2 & out_is_wl).sum() + inc_mc.sum()).astype(i32)
         # the feeding group's tail has been sent: detach the copies
         mc_src = jnp.where(ident_mc & tail.reshape(-1)[svm], -1, mc_src)
 
-        # free VCs whose tail left
-        pkt_src = jnp.where(tail, -1, pkt_src)
-        out_vc = jnp.where(tail, -1, out_vc)
-        out_is_wl = jnp.where(tail, False, out_is_wl)
-        out_is_ej = jnp.where(tail, False, out_is_ej)
+        if phy_on:
+            # per-(src, dst) WI pacing + energy counters, scatter style:
+            # at most one air transmission per pair per cycle, so the
+            # scatters are conflict-free
+            ws_col = jnp.broadcast_to(
+                jnp.clip(ss.b_wi, 0, WMAX - 1)[:, None], (B, V))
+            pw_s = jnp.where(is_wl_fwd, ws_col, WMAX).reshape(-1)
+            pw_d = wd_bv.reshape(-1)
+            pair_busy = st.pair_busy.at[pw_s, pw_d].set(
+                (t + serv_t).reshape(-1), mode="drop")
+            wl_pair_flits = st.wl_pair_flits.at[pw_s, pw_d].add(
+                post, mode="drop")
+            pw_sf = jnp.where(is_wl_fwd & fail_bv, ws_col,
+                              WMAX).reshape(-1)
+            wl_fail_flits = st.wl_fail_flits.at[pw_sf, pw_d].add(
+                post, mode="drop")
+            if mem_on:
+                # ARQ drop of a memory request/reply: credit the
+                # requester's window and tombstone a dropped request's
+                # reply slot (see simulator.py) — scatter style; each
+                # drop targets a distinct slot, so scatters are
+                # conflict-free (outst uses duplicate-safe add)
+                Nn2, Kk2 = ss.phases.shape
+                is_rqd = drop & memrq_bv                         # [B, V]
+                is_repd = drop & ((op_bv == 3) | (op_bv == 4))
+                tgt_d = jnp.where(
+                    is_rqd, psrc_c,
+                    jnp.where(is_repd,
+                              jnp.clip(ss.req_src[psrc_c, pidx_c],
+                                       0, Nn2 - 1), Nn2))
+                outst = outst.at[tgt_d.reshape(-1)].add(-1, mode="drop")
+                rr_d = jnp.where(
+                    is_rqd,
+                    jnp.clip(ss.reply_row[psrc_c, pidx_c], 0, Nn2 - 1),
+                    Nn2).reshape(-1)
+                rs_d = jnp.clip(ss.reply_slot[psrc_c, pidx_c],
+                                0, Kk2 - 1).reshape(-1)
+                dead = dead.at[rr_d, rs_d].set(True, mode="drop")
+            # a dropped packet frees the receiver VC its claim held
+            db_t = jnp.where(drop, out_buf, B).reshape(-1)
+            rx_dropped = jnp.zeros((B, V), bool).at[
+                db_t, ovc_c.reshape(-1)].set(True, mode="drop")
+            freed = tail | drop | rx_dropped
+        else:
+            pair_busy = st.pair_busy
+            wl_pair_flits = st.wl_pair_flits
+            wl_fail_flits = st.wl_fail_flits
+            freed = tail
+
+        # free VCs whose tail left (phy: plus ARQ drops, both sides)
+        pkt_src = jnp.where(freed, -1, pkt_src)
+        out_vc = jnp.where(freed, -1, out_vc)
+        out_is_wl = jnp.where(freed, False, out_is_wl)
+        out_is_ej = jnp.where(freed, False, out_is_ej)
         active = pkt_src >= 0
 
         # ---- 3. injection -------------------------------------------------
@@ -721,11 +856,17 @@ def make_step(B: int, Wout: int, RXW: int = 1, mem_on: bool = False):
         phase2 = iclaim(phase2, jnp.zeros((N,), bool))
         mc_id = iclaim(mc_id, mcv_n)
         mc_src = iclaim(mc_src, jnp.full((N,), -1, i32))
+        attempt = iclaim(attempt, jnp.zeros((N,), i32))
         rcvd = iclaim(rcvd, jnp.zeros((N,), i32))
         sent = iclaim(sent, jnp.zeros((N,), i32))
         inj_vc = jnp.where(can_new, ivc, st.inj_vc)
         inj_pushed = jnp.where(can_new, 0, st.inj_pushed)
         q_head = st.q_head + can_new.astype(i32)
+        if mem_on and phy_on:
+            # tombstoned reply slots (request ARQ-dropped) never birth:
+            # advance past them so the in-order channel keeps flowing
+            skip = (st.inj_vc < 0) & (st.q_head < K) & dead[n_ar, qh]
+            q_head = q_head + skip.astype(i32)
         outst_peak = st.outst_peak
         if mem_on:
             outst = outst + (can_new & is_tx).astype(i32)
@@ -761,11 +902,13 @@ def make_step(B: int, Wout: int, RXW: int = 1, mem_on: bool = False):
             out_o=out_o, out_buf=out_buf, out_wo=out_wo, out_is_wl=out_is_wl,
             out_is_ej=out_is_ej, out_vc=out_vc, phase2=phase2,
             rcvd=rcvd, sent=sent, mc_id=mc_id, mc_src=mc_src,
-            pipe=pipe, busy_until=busy_until, wl_busy_until=wl_busy_until,
+            attempt=attempt, pipe=pipe, busy_until=busy_until,
+            wl_busy_until=wl_busy_until, pair_busy=pair_busy,
             q_head=q_head, inj_vc=inj_vc, inj_pushed=inj_pushed,
             cur_phase=cur_phase, phase_del=phase_del, phase_end=phase_end,
             phase_flits=phase_flits,
-            rdy=rdy, outst=outst, bank_busy=bank_busy, bank_row=bank_row,
+            rdy=rdy, dead=dead, outst=outst,
+            bank_busy=bank_busy, bank_row=bank_row,
             outst_peak=outst_peak, amat_sum=amat_sum, amat_pkts=amat_pkts,
             mem_reads=mem_reads, mem_writes=mem_writes,
             mem_row_hits=mem_row_hits, mem_q_sum=mem_q_sum,
@@ -775,15 +918,18 @@ def make_step(B: int, Wout: int, RXW: int = 1, mem_on: bool = False):
             count_switch=count_switch, ctrl_count=ctrl_count,
             wl_tx_flits=wl_tx_flits, wl_rx_flits=wl_rx_flits,
             awake_cycles=awake_cycles, sleep_cycles=sleep_cycles,
+            wl_pair_flits=wl_pair_flits, wl_fail_flits=wl_fail_flits,
+            wl_pkts=wl_pkts, wl_nacks=wl_nacks, pkts_dropped=pkts_dropped,
         )
 
     return step
 
 
-@functools.partial(jax.jit, static_argnums=(2, 3, 4, 5, 6))
+@functools.partial(jax.jit, static_argnums=(2, 3, 4, 5, 6, 7))
 def _run(ss: SimStatic, st: SimState, cycles: int, B: int,
-         Wout: int, RXW: int = 1, mem_on: bool = False) -> SimState:
-    step = make_step(B, Wout, RXW, mem_on)
+         Wout: int, RXW: int = 1, mem_on: bool = False,
+         phy_on: bool = False) -> SimState:
+    step = make_step(B, Wout, RXW, mem_on, phy_on)
 
     def body(carry, t):
         return step(ss, carry, t), None
@@ -812,12 +958,15 @@ class PackedSim:
     mem_on: bool = False
     Y: int = 1
     BK: int = 1
+    phy_on: bool = False
+    phy_link: object = None
 
 
 def pack(topo: Topology, rt: RoutingTables, tt: TrafficTable,
          phy: PhyParams, sim: SimParams,
          b_bucket: int = 64, s_bucket: int = 8, r_bucket: int = 64,
-         k_bucket: int = 32) -> PackedSim:
+         k_bucket: int = 32, phy_spec=None) -> PackedSim:
+    from repro.phy.rates import pack_link_state
     Lw = topo.n_links
     n_inj = tt.n_sources
     n_wi = topo.n_wi
@@ -896,6 +1045,11 @@ def pack(topo: Topology, rt: RoutingTables, tt: TrafficTable,
         for b in range(rx0):
             if int(b_dst[b]) in wi_set:
                 b_depth[b] = max(int(b_depth[b]), phy.pkt_flits)
+
+    # lossy PHY (ISSUE 4): the shared helper guarantees both engines
+    # pack identical link state (see phy.rates.pack_link_state)
+    pli, phy_on, rx_hold = pack_link_state(
+        topo, phy, tt, phy_spec, b_dst, b_depth, b_epb, rx0)
 
     # routing lookup tables
     next_out = np.full((S, S), 0, np.int32)
@@ -1017,10 +1171,19 @@ def pack(topo: Topology, rt: RoutingTables, tt: TrafficTable,
         t_row_hit=jnp.int32(dram.t_row_hit),
         t_row_miss=jnp.int32(dram.t_row_miss),
         max_outst=jnp.int32(max_outst),
+        wl_serv=jnp.asarray(pli.serv if phy_on
+                            else np.ones((WMAX, WMAX), np.int32)),
+        wl_perq=jnp.asarray(pli.perq if phy_on
+                            else np.zeros((WMAX, WMAX), np.int32)),
+        rx_hold=jnp.asarray(rx_hold),
+        max_retx=jnp.int32(phy_spec.max_retx if phy_on else 1),
+        phy_seed=jnp.uint32(phy_spec.seed if phy_on else 0),
+        ctrl_flits=jnp.int32(phy.ctrl_packet_flits),
     )
     return PackedSim(ss=ss, B=B, Wout=Wout, n_cores=topo.n_cores, Lw=Lw,
                      n_inj=n_inj, topo=topo, rt=rt, phy=phy, sim=sim,
-                     RXW=RXW, mem_on=mem_on, Y=Y, BK=BK)
+                     RXW=RXW, mem_on=mem_on, Y=Y, BK=BK, phy_on=phy_on,
+                     phy_link=pli)
 
 
 def run(ps: PackedSim, cycles: int | None = None) -> SimState:
@@ -1029,4 +1192,5 @@ def run(ps: PackedSim, cycles: int | None = None) -> SimState:
     st = init_state(ps.B, int(N), int(ps.ss.phase_need.shape[0]),
                     int(K), ps.Y, ps.BK)
     return jax.block_until_ready(
-        _run(ps.ss, st, cycles, ps.B, ps.Wout, ps.RXW, ps.mem_on))
+        _run(ps.ss, st, cycles, ps.B, ps.Wout, ps.RXW, ps.mem_on,
+             ps.phy_on))

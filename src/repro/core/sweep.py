@@ -37,6 +37,10 @@ from repro.core.topology import Topology, build_xcym
 
 HARMONIZED_DIMS = ("B", "S", "R", "K", "CS", "CR", "M", "P", "Y", "BK")
 
+# Cumulative points simulated via run_sweep_batched (per process).
+# benchmarks/run.py diffs this around each suite to report points/sec.
+POINTS_RUN = 0
+
 
 @functools.lru_cache(maxsize=64)
 def _cached_system(n_chips: int, n_mem: int, fabric: Fabric, phy: PhyParams,
@@ -61,6 +65,12 @@ class SweepPoint:
     applies the same reinterpretation to ``app`` MMP traffic (its
     ``p_mem`` packets become round-trip reads; ``dram`` optionally
     overrides the stack timing).
+
+    ``phy_spec`` (a ``phy.PhySweepSpec``) turns the ideal wireless
+    medium into the lossy channel: per-link SNR/BER-derived rates, CRC
+    retransmission and drops.  Wireline fabrics ignore it (they run the
+    exact ideal program), so a quality sweep can span all three fabrics
+    in one grid.
     """
 
     n_chips: int
@@ -75,6 +85,7 @@ class SweepPoint:
     mem: object | None = None
     closed_loop: bool = False
     dram: object | None = None
+    phy_spec: object | None = None
     wireless_weight: float = 3.0
     name: str | None = None
 
@@ -107,7 +118,9 @@ def _build_point(p: SweepPoint):
                                  closed_loop=p.closed_loop, dram=p.dram)
     label = p.name or f"{topo.name}/load={p.load}/p_mem={p.p_mem}" \
         + (f"/{p.app}" if p.app else "") \
-        + ("/closed" if p.closed_loop else "")
+        + ("/closed" if p.closed_loop else "") \
+        + (f"/phy:{p.phy_spec.policy}@{p.phy_spec.link_budget_db}dB"
+           if p.phy_spec is not None else "")
     return topo, rt, tt, label
 
 
@@ -121,6 +134,8 @@ def run_sweep_batched(points: Sequence[SweepPoint],
     batching only changes how many points ride in one launch, never the
     per-point program.
     """
+    global POINTS_RUN
+    POINTS_RUN += len(points)
     built = [_build_point(p) for p in points]
     natural = [simulator.pack_dims(topo, tt)
                for topo, _, tt, _ in built]
@@ -139,7 +154,8 @@ def run_sweep_batched(points: Sequence[SweepPoint],
         for i in idxs:
             topo, rt, tt, _ = built[i]
             packed[i] = simulator.pack(topo, rt, tt, points[i].phy,
-                                       points[i].sim, floors=floors)
+                                       points[i].sim, floors=floors,
+                                       phy_spec=points[i].phy_spec)
         # harmonized dims should unify shapes; split defensively by shape
         by_shape: dict[tuple, list[int]] = {}
         for i in idxs:
@@ -167,6 +183,7 @@ def run_point(
     mem: object | None = None,
     closed_loop: bool = False,
     dram: object | None = None,
+    phy_spec: object | None = None,
     wireless_weight: float = 3.0,
     name: str | None = None,
 ) -> Metrics:
@@ -177,7 +194,8 @@ def run_point(
     return run_sweep_batched([SweepPoint(
         n_chips=n_chips, n_mem=n_mem, fabric=fabric, load=load, p_mem=p_mem,
         phy=phy, sim=sim, app=app, mem=mem, closed_loop=closed_loop,
-        dram=dram, wireless_weight=wireless_weight, name=name)])[0]
+        dram=dram, phy_spec=phy_spec, wireless_weight=wireless_weight,
+        name=name)])[0]
 
 
 def saturation_bandwidth(n_chips: int, n_mem: int, fabric: Fabric,

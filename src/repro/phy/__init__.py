@@ -1,0 +1,42 @@
+"""Lossy-channel PHY subsystem for the in-package 60 GHz medium (ISSUE 4).
+
+The cycle-accurate engines historically modeled an ideal wireless medium:
+every flit arrived intact at one fixed rate.  This package adds the three
+pieces the channel-measurement literature says dominate real in-package
+mm-wave links (Timoneda et al. 2018/2019):
+
+- ``phy.channel``: a deterministic per-(src WI, dst WI) link-quality
+  model — path loss from WI placement distance plus seeded per-link
+  shadowing gives an SNR, and the SNR gives a BER per rate-table entry.
+  Pure numpy, host-side, and the executable reference the property tests
+  pin.
+- ``phy.rates``: the small rate/modulation table (16/8/4 Gbps with
+  energy-per-bit and robustness scaling) and the static per-link
+  rate-selection pass — pick the fastest rate whose expected
+  retransmissions keep goodput above the next rate down (the "engineer
+  the channel and adapt to it" policy) — plus fixed-rate baselines and
+  the oracle single fixed rate.
+- ``phy.retx``: the counter-based deterministic CRC hash both engines
+  draw per (seed, packet, attempt) against the link's packet-error
+  threshold, and the host-side reference that predicts per-packet
+  attempt counts / drops exactly.
+
+``link_tables`` is the packing entry point: both engines' ``pack``
+functions call it with the topology and a ``PhySweepSpec`` and receive
+the padded per-pair service/PER/energy tables (``PhyLinkInfo``) they
+embed.  The whole path is compiled only under a static ``phy_on`` flag;
+``phy_spec=None`` (or a fabric without WIs) runs the exact pre-PHY
+program, byte for byte.
+"""
+from repro.phy.channel import (ChannelParams, PhySweepSpec, link_distances,
+                               link_snr_db, shadowing_db)
+from repro.phy.rates import (DEFAULT_RATE_TABLE, RateEntry, link_tables,
+                             oracle_fixed_rate, select_rates, PhyLinkInfo)
+from repro.phy.retx import crc_fail, crc_hash, reference_attempts
+
+__all__ = [
+    "ChannelParams", "PhySweepSpec", "link_distances", "link_snr_db",
+    "shadowing_db", "DEFAULT_RATE_TABLE", "RateEntry", "PhyLinkInfo",
+    "link_tables", "oracle_fixed_rate", "select_rates",
+    "crc_fail", "crc_hash", "reference_attempts",
+]

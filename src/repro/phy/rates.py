@@ -1,0 +1,214 @@
+"""Rate/modulation table and the static per-link rate-selection pass.
+
+The table spans the paper's 16 Gbps OOK channel down to two derated
+fallbacks.  Halving the rate doubles the per-bit integration time, which
+(a) doubles the effective SNR (``gain`` — robustness), (b) doubles the
+flit serialization time (``serv_scale`` — the engines' per-link
+``wireless_flit_cycles``), and (c) doubles the energy per bit at fixed
+TX power (``epb_scale``).
+
+Rate selection is *static per link* — the "engineer the channel and
+adapt to it" policy (Timoneda et al. 2019): the channel inside a sealed
+package does not fade over time, so per-link rates are picked once from
+the measured SNR map.  ``select_rates`` walks the table fastest-first
+and keeps the fastest entry whose expected goodput (rate derated by the
+expected ARQ attempts, ``rate * (1 - PER)``) is at least the next,
+slower entry's — i.e. it stops exactly when slowing down would stop
+paying.  ``oracle_fixed_rate`` is the strongest *non-adaptive* baseline:
+the single table entry maximizing total expected goodput over every
+used link.
+
+``link_tables`` packages the result for the engines: padded
+``[WMAX, WMAX]`` per-pair tables of flit service cycles, quantized
+packet-error thresholds (16-bit, compared against the CRC hash of
+``phy.retx``) and energy per bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.constants import WMAX, PhyParams
+from repro.core.topology import Topology
+from repro.phy.channel import (PhySweepSpec, ber_from_snr, link_snr_db,
+                               per_packet)
+
+PER_Q = 16                    # PER quantization: threshold in [0, 2^16]
+
+
+@dataclasses.dataclass(frozen=True)
+class RateEntry:
+    """One rate/modulation point of the link adaptation table."""
+
+    name: str
+    gbps: float
+    serv_scale: int      # x wireless_flit_cycles (serialization time)
+    gain: float          # effective-SNR multiplier (processing gain)
+    epb_scale: float     # x e_wireless_pj_bit (fixed TX power, longer bits)
+
+
+# Fastest first — the order the selection pass walks.
+DEFAULT_RATE_TABLE = (
+    RateEntry("16g", 16.0, 1, 1.0, 1.0),
+    RateEntry("8g", 8.0, 2, 2.0, 2.0),
+    RateEntry("4g", 4.0, 4, 4.0, 4.0),
+)
+
+
+@dataclasses.dataclass
+class PhyLinkInfo:
+    """Per-link PHY tables of one packed point (host + engine views).
+
+    ``serv``/``perq`` are the padded int32 tables the engines embed;
+    ``rate_idx``/``per``/``epb`` stay host-side for metrics (selected
+    rate histogram, retransmission-energy share) and tests.
+    """
+
+    spec: PhySweepSpec
+    table: tuple            # the RateEntry tuple used
+    n_wi: int
+    rate_idx: np.ndarray    # [WMAX, WMAX] int32 selected table entry
+    serv: np.ndarray        # [WMAX, WMAX] int32 flit cycles on that link
+    perq: np.ndarray        # [WMAX, WMAX] int32 16-bit PER threshold
+    per: np.ndarray         # [WMAX, WMAX] float exact packet error rate
+    epb: np.ndarray         # [WMAX, WMAX] float pJ/bit on that link
+    snr_db: np.ndarray      # [n_wi, n_wi] float
+
+
+def rate_per_matrix(snr_db: np.ndarray, packet_bits: int,
+                    table=DEFAULT_RATE_TABLE) -> np.ndarray:
+    """[R, W, W] packet error rate of every table entry on every link."""
+    return np.stack([per_packet(ber_from_snr(snr_db, e.gain), packet_bits)
+                     for e in table])
+
+
+def expected_goodput(per_r: np.ndarray, table=DEFAULT_RATE_TABLE
+                     ) -> np.ndarray:
+    """[R, W, W] expected goodput: rate derated by expected attempts.
+
+    Successful delivery takes ``1 / (1 - PER)`` expected attempts, so a
+    link at rate R delivers ``R * (1 - PER)`` useful bits per unit
+    air time.
+    """
+    rates = np.asarray([e.gbps for e in table])
+    return rates[:, None, None] * (1.0 - per_r)
+
+
+def select_rates(per_r: np.ndarray, table=DEFAULT_RATE_TABLE) -> np.ndarray:
+    """[W, W] adaptive per-link entry: fastest rate worth keeping.
+
+    The expected-goodput argmax per link (ties break toward the faster
+    entry).  In the physical regime — PER monotone in robustness, so
+    goodput is unimodal across the table — this is exactly the
+    fastest-first walk that stops at the first rate whose expected
+    retransmissions no longer justify abandoning ("engineer the channel
+    and adapt to it"); the argmax form also handles the degenerate
+    saturated-PER links (every rate ~dead) where the walk's local
+    comparison is uninformative.
+    """
+    gp = expected_goodput(per_r, table)
+    # np.argmax returns the first maximum: equal goodputs pick the
+    # faster entry
+    return np.argmax(gp, axis=0).astype(np.int32)
+
+
+def oracle_fixed_rate(per_r: np.ndarray, used: np.ndarray,
+                      table=DEFAULT_RATE_TABLE) -> int:
+    """Best single fixed rate: max total expected goodput over used links."""
+    gp = expected_goodput(per_r, table)
+    totals = np.where(used[None], gp, 0.0).sum(axis=(1, 2))
+    return int(np.argmax(totals))
+
+
+def pack_link_state(topo: Topology, phy: PhyParams, tt, phy_spec,
+                    b_dst: np.ndarray, b_depth: np.ndarray,
+                    b_epb: np.ndarray, rx0: int):
+    """Shared host-side PHY packing for BOTH engines' ``pack()``.
+
+    One implementation on purpose: the dual-engine invariant covers the
+    two step *formulations*, not this plain-python preprocessing — a
+    single helper cannot drift between them.  Mutates ``b_depth`` /
+    ``b_epb`` in place (store-and-forward buffer deepening, rx epb
+    zeroing) and returns ``(pli, phy_on, rx_hold)``.
+    """
+    n_wi = topo.n_wi
+    pli = link_tables(topo, phy, phy_spec)
+    phy_on = pli is not None
+    n_mc = getattr(tt, "n_mc", 0)
+    if phy_on and n_mc:
+        raise ValueError(
+            "lossy PHY does not support multicast tables yet — per-member "
+            "CRC outcomes for broadcast ARQ are future work")
+    deep = max(phy.pkt_flits,
+               int(tt.lens.max()) if getattr(tt, "lens", None) is not None
+               else 0)
+    rx_hold = bool(n_mc > 0 or phy_on)
+    if rx_hold:
+        # store-and-forward receivers: rx buffers hold a whole packet
+        # (multicast livelock fix + the ARQ tail-CRC check)
+        for w in range(n_wi):
+            b_depth[rx0 + w] = max(int(b_depth[rx0 + w]), deep)
+    if phy_on:
+        # ARQ senders hold the whole packet for retransmission (cf. the
+        # token MAC) and wireless link energy moves to the per-pair
+        # counters (metrics), so the rx buffers' epb is zeroed
+        wi_set = set(int(x) for x in topo.wi_switch)
+        for b in range(rx0):
+            if int(b_dst[b]) in wi_set:
+                b_depth[b] = max(int(b_depth[b]), deep)
+        for w in range(n_wi):
+            b_epb[rx0 + w] = 0.0
+    return pli, phy_on, rx_hold
+
+
+def link_tables(topo: Topology, phy: PhyParams,
+                spec: PhySweepSpec | None,
+                table=DEFAULT_RATE_TABLE) -> PhyLinkInfo | None:
+    """Build the padded per-(src WI, dst WI) PHY tables of one point.
+
+    Returns ``None`` when the point has no lossy PHY (``spec`` is None)
+    or no wireless medium (``topo.n_wi == 0`` — wireline fabrics run the
+    exact pre-PHY program, the fig9 "wireline unaffected" guarantee).
+    """
+    n_wi = topo.n_wi
+    if spec is None or n_wi == 0:
+        return None
+    snr = link_snr_db(topo, spec)
+    packet_bits = phy.pkt_flits * phy.flit_bits
+    per_r = rate_per_matrix(snr, packet_bits, table)          # [R, W, W]
+
+    pol = spec.policy
+    if pol == "adaptive":
+        idx = select_rates(per_r, table)
+    elif pol == "oracle":
+        used = ~np.eye(n_wi, dtype=bool)
+        idx = np.full((n_wi, n_wi),
+                      oracle_fixed_rate(per_r, used, table), np.int32)
+    elif pol.startswith("fixed:"):
+        i = int(pol.split(":", 1)[1]) % len(table)
+        idx = np.full((n_wi, n_wi), i, np.int32)
+    else:
+        raise ValueError(f"unknown PHY rate policy {pol!r}")
+
+    rate_idx = np.zeros((WMAX, WMAX), np.int32)
+    serv = np.ones((WMAX, WMAX), np.int32)
+    perq = np.zeros((WMAX, WMAX), np.int32)
+    per = np.zeros((WMAX, WMAX), np.float64)
+    epb = np.zeros((WMAX, WMAX), np.float64)
+    ii, jj = np.meshgrid(np.arange(n_wi), np.arange(n_wi), indexing="ij")
+    per_sel = per_r[idx, ii, jj]
+    rate_idx[:n_wi, :n_wi] = idx
+    serv[:n_wi, :n_wi] = phy.wireless_flit_cycles * np.asarray(
+        [table[i].serv_scale for i in range(len(table))], np.int32)[idx]
+    # quantize PER onto the 16-bit CRC-hash range; ceil so a nonzero PER
+    # never rounds to "lossless"
+    perq[:n_wi, :n_wi] = np.minimum(
+        np.ceil(per_sel * float(1 << PER_Q)), float((1 << PER_Q) - 1)
+    ).astype(np.int32)
+    per[:n_wi, :n_wi] = per_sel
+    epb[:n_wi, :n_wi] = phy.e_wireless_pj_bit * np.asarray(
+        [table[i].epb_scale for i in range(len(table))])[idx]
+    return PhyLinkInfo(spec=spec, table=tuple(table), n_wi=n_wi,
+                       rate_idx=rate_idx, serv=serv, perq=perq, per=per,
+                       epb=epb, snr_db=snr)

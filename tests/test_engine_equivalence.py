@@ -1,5 +1,12 @@
 """Differential test: scatter-free engine == reference scatter engine.
 
+Lossy-channel points (ISSUE 4) are pinned like everything else: the
+ARQ/CRC path is formulated twice — air-winner tables + masked
+one-assignments in ``simulator.py``, per-pair scatters in
+``simulator_ref.py`` — and every state field (including ``attempt``,
+``pair_busy`` and the ``wl_*``/``pkts_dropped`` counters) must agree
+bitwise across media and MAC modes.
+
 ``simulator.py``'s candidate-table/gather step must produce *bitwise*
 identical dynamics to the original scatter/segment implementation kept in
 ``simulator_ref.py``.  ``out_wo`` is excluded: it is a static arbitration
@@ -26,9 +33,11 @@ from repro.workloads.trace import Trace, mcast, p2p, phase
 SKIP_FIELDS = {"out_wo", "mc_src"}
 
 
-def _compare(topo, rt, tt, phy, sim):
-    so = simulator_ref.run(simulator_ref.pack(topo, rt, tt, phy, sim))
-    sn = simulator.run(simulator.pack(topo, rt, tt, phy, sim))
+def _compare(topo, rt, tt, phy, sim, phy_spec=None):
+    so = simulator_ref.run(
+        simulator_ref.pack(topo, rt, tt, phy, sim, phy_spec=phy_spec))
+    sn = simulator.run(
+        simulator.pack(topo, rt, tt, phy, sim, phy_spec=phy_spec))
     for f in so._fields:
         if f in SKIP_FIELDS or f not in sn._fields:
             continue
@@ -36,6 +45,7 @@ def _compare(topo, rt, tt, phy, sim):
         b = np.asarray(getattr(sn, f))
         assert np.array_equal(a, b), f"field {f} diverged"
     assert int(sn.flits_inj) > 0      # the comparison exercised real traffic
+    return sn
 
 
 def test_engines_equivalent_wireless():
@@ -128,6 +138,64 @@ def test_engines_equivalent_closed_loop_memory():
     sim = SimParams(cycles=600, warmup=100)
     _compare(topo, rt, _closed_loop_table(topo, sim.cycles), DEFAULT_PHY,
              sim)
+
+
+def _lossy_spec(budget=17.0, policy="adaptive"):
+    from repro.phy import PhySweepSpec
+    return PhySweepSpec(link_budget_db=budget, policy=policy, max_retx=3)
+
+
+def test_engines_equivalent_lossy_crossbar():
+    """ISSUE 4 acceptance: CRC retransmission, per-link rates, pacing and
+    drops stay bitwise-equal across both formulations."""
+    topo = build_xcym(4, 4, Fabric.WIRELESS)
+    rt = compute_routing(topo)
+    sim = SimParams(cycles=600, warmup=100)
+    tt = traffic.uniform_random(topo, 0.6, 0.3, sim.cycles, 64, seed=21)
+    sn = _compare(topo, rt, tt, DEFAULT_PHY, sim, phy_spec=_lossy_spec())
+    assert int(sn.wl_nacks) > 0       # the point exercised the ARQ path
+
+
+@pytest.mark.parametrize("case", ["matching", "single", "token"])
+def test_engines_equivalent_lossy_media(case):
+    """Lossy points across {matching, single} media x TOKEN MAC."""
+    topo = build_xcym(4, 4, Fabric.WIRELESS)
+    rt = compute_routing(topo)
+    phy, sim = DEFAULT_PHY, SimParams(cycles=600, warmup=0)
+    if case == "matching":
+        phy = PhyParams(wireless_medium="matching")
+    elif case == "single":
+        phy = PhyParams(wireless_medium="single", wireless_flit_cycles=5)
+    else:
+        sim = SimParams(cycles=600, warmup=0, mac=MacMode.TOKEN)
+    tt = traffic.uniform_random(topo, 0.7, 0.3, sim.cycles, phy.pkt_flits,
+                                seed=23)
+    _compare(topo, rt, tt, phy, sim, phy_spec=_lossy_spec(budget=16.0))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("case", ["fixed-fast", "drops", "8c", "memcl"])
+def test_engines_equivalent_lossy_variants(case):
+    phy, sim = DEFAULT_PHY, SimParams(cycles=600, warmup=0)
+    spec = _lossy_spec()
+    topo = build_xcym(8 if case == "8c" else 4, 4, Fabric.WIRELESS)
+    rt = compute_routing(topo)
+    if case == "fixed-fast":
+        spec = _lossy_spec(budget=15.0, policy="fixed:0")
+    elif case == "drops":
+        from repro.phy import PhySweepSpec
+        spec = PhySweepSpec(link_budget_db=13.0, max_retx=2)
+    if case == "memcl":
+        # drop-heavy so the outstanding-credit + reply-tombstone path
+        # (dead slots, q_head skip) is exercised in both formulations
+        from repro.phy import PhySweepSpec
+        spec = PhySweepSpec(link_budget_db=13.0, max_retx=2)
+        tt = _closed_loop_table(topo, sim.cycles)
+        sn = _compare(topo, rt, tt, phy, sim, phy_spec=spec)
+        assert int(sn.pkts_dropped) > 0 and bool(np.asarray(sn.dead).any())
+        return
+    tt = traffic.uniform_random(topo, 0.6, 0.3, sim.cycles, 64, seed=29)
+    _compare(topo, rt, tt, phy, sim, phy_spec=spec)
 
 
 @pytest.mark.slow

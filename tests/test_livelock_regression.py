@@ -1,0 +1,83 @@
+"""Regression pin for the one-shot multicast all-reduce livelock (ISSUE 4).
+
+The bug (first seen in PR 3, reproduced identically on the seed engine):
+a one-shot all-reduce trace — every device multicasts its payload to the
+rest of the group — could stall forever on the wireless fabric.  The
+cycle: a mid-stream multicast copy in a WI rx buffer held a claimed
+downstream VC while waiting for more flits from the air; its sender
+could not transmit because *another* copy of the same group had a full
+rx buffer; that copy could not drain because the downstream VCs were
+held by the first kind of copy.  All-or-nothing group backpressure
+closed the cycle and no rotation of arbitration priorities could break
+it.
+
+The fix: store-and-forward receivers (``rx_hold``, packed whenever the
+table has multicast groups): an rx-buffer slot neither claims its
+downstream VC nor forwards until the whole packet has arrived, so a
+granted VC always drains from locally buffered flits and the circular
+wait cannot form.  Applied to BOTH engines (the differential multicast
+tests pin them equal).
+
+This test runs the previously-livelocking trace to completion on the
+fixed engine, and — because ``rx_hold`` and the rx-buffer depths are
+traced data — replays the *exact pre-fix program* to prove it still
+stalls where the fixed one finishes.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import simulator, traffic
+from repro.core.constants import DEFAULT_PHY, Fabric, SimParams
+from repro.core.routing import compute_routing
+from repro.core.topology import build_xcym
+from repro.workloads.mapping import DeviceMap
+from repro.workloads.schedules import expand_collective
+from repro.workloads.trace import Trace
+
+
+def _oneshot_allreduce_point(cycles: int):
+    topo = build_xcym(4, 4, Fabric.WIRELESS)
+    rt = compute_routing(topo)
+    dm = DeviceMap(topo, 16)
+    phases = expand_collective("all-reduce", 512.0, 16, dm,
+                               schedule="oneshot", label="ar")
+    tt = traffic.from_trace(topo, Trace("oneshot-ar", 16, phases),
+                            DEFAULT_PHY.pkt_flits)
+    sim = SimParams(cycles=cycles, warmup=0)
+    return simulator.pack(topo, rt, tt, DEFAULT_PHY, sim)
+
+
+def _pre_fix(ps):
+    """The exact pre-fix program: no rx hold, 16-flit rx buffers."""
+    rx0, n_wi = int(ps.ss.rx0), int(ps.ss.n_wi)
+    depth = np.asarray(ps.ss.b_depth).copy()
+    depth[rx0:rx0 + n_wi] = 16
+    return dataclasses.replace(ps, ss=ps.ss._replace(
+        rx_hold=jnp.asarray(False), b_depth=jnp.asarray(depth)))
+
+
+def test_oneshot_multicast_allreduce_completes():
+    """The previously-livelocking trace now runs to completion."""
+    ps = _oneshot_allreduce_point(8000)
+    st = simulator.run(ps)
+    assert int(st.cur_phase) == int(ps.ss.n_phases), \
+        "one-shot all-reduce did not complete (livelock regression)"
+    ends = np.asarray(st.phase_end)[: int(ps.ss.n_phases)]
+    assert (ends > 0).all()
+
+
+def test_pre_fix_program_still_livelocks():
+    """Replaying the old semantics stalls exactly where it used to —
+    proving this trace pins the bug, not just a tight cycle budget."""
+    ps = _oneshot_allreduce_point(3000)
+    old = _pre_fix(ps)
+    st_half = simulator.run(old, cycles=1500)
+    st_full = simulator.run(old, cycles=3000)
+    assert int(st_full.cur_phase) == 0            # never closes phase 0
+    # zero progress over the second half: a stall, not slowness
+    assert int(st_full.pkts_del) == int(st_half.pkts_del)
+    # while the fixed program has already closed phase 0 by then
+    st_fixed = simulator.run(ps, cycles=3000)
+    assert int(st_fixed.cur_phase) >= 1
