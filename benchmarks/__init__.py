@@ -21,9 +21,21 @@ _FLAG = "--xla_force_host_platform_device_count"
 
 
 def _setup_host_devices() -> None:
+    """Split the CPU into virtual XLA devices for the pmap-sharded sweeps.
+
+    Precedence: an operator-provided ``XLA_FLAGS`` split wins outright;
+    otherwise ``REPRO_XLA_DEVICES=<n>`` picks the split explicitly (``1``
+    disables sharding — useful to isolate single-device perf, or to
+    oversubscribe a big box beyond the default cap); otherwise a
+    heuristic 2..4 based on the core count (see README "Benchmarks").
+    """
     if _FLAG in os.environ.get("XLA_FLAGS", ""):
         return
-    n = max(2, min(4, os.cpu_count() or 1))
+    env = os.environ.get("REPRO_XLA_DEVICES", "").strip()
+    if env:
+        n = max(1, int(env))
+    else:
+        n = max(2, min(4, os.cpu_count() or 1))
     os.environ["XLA_FLAGS"] = \
         (os.environ.get("XLA_FLAGS", "") + f" {_FLAG}={n}").strip()
 

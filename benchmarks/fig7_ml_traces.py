@@ -112,7 +112,7 @@ def main() -> None:
     ms = run_sweep_batched(points)
 
     emit("fig7,point,done_phases,cycles,GB_delivered,pj_bit,links_pj_bit,"
-         "analytic_pj_bit,ratio,uniform_pj_bit,wl_tx,wl_rx")
+         "analytic_pj_bit,ratio,uniform_pj_bit,wl_tx,wl_rx,drain_cycle")
     worst = 0.0
     phy = points[0].phy
     for (name, tr, fab), m in zip(metas, ms):
@@ -136,7 +136,8 @@ def main() -> None:
         emit(f"fig7,{m.name},{m.phases_done}/{m.n_phases},"
              f"{m.trace_cycles},{bits/8e9:.6f},{m.energy_pj_bit:.2f},"
              f"{links_pj_bit:.2f},{analytic_pj_bit:.2f},{ratio:.2f},"
-             f"{uniform:.2f},{m.wl_tx_flits},{m.wl_rx_flits}")
+             f"{uniform:.2f},{m.wl_tx_flits},{m.wl_rx_flits},"
+             f"{m.drain_cycle}")
 
     # per-collective timing on the wireless fabric, one line per model
     for (name, tr, fab), m in zip(metas, ms):

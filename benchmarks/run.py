@@ -1,15 +1,22 @@
 """Benchmark runner: one module per paper figure + ablations + roofline.
 
-Usage:  PYTHONPATH=src python -m benchmarks.run [fig2 fig3 ... | all]
+Usage:  PYTHONPATH=src python -m benchmarks.run [--profile] [fig2 ... | all]
 
 Each suite ends with a one-line ``bench.summary`` row — wall-clock and
 simulated points per second (from ``sweep.POINTS_RUN``) — so perf
 regressions are visible directly in CI logs.
+
+``--profile`` wraps the FIRST selected suite in a ``jax.profiler`` trace
+and writes it to ``profile_trace/`` (open with TensorBoard or Perfetto)
+— the quickest way to see where a suite's wall clock goes (compile vs
+launch vs the while_loop chunks).
 """
 from __future__ import annotations
 
 import sys
 import time
+
+PROFILE_DIR = "profile_trace"
 
 
 def main() -> None:
@@ -38,14 +45,22 @@ def main() -> None:
         pass
 
     args = sys.argv[1:] or ["all"]
+    profile = "--profile" in args
+    args = [a for a in args if a != "--profile"] or ["all"]
     picked = list(dict.fromkeys(suites)) if args == ["all"] else args
     if args == ["all"]:
         picked.remove("fig9_lossy_channel")     # alias of fig9
-    for name in picked:
+    for i, name in enumerate(picked):
         t0 = time.perf_counter()
         p0 = sweep.POINTS_RUN
         print(f"=== {name} ===", flush=True)
-        suites[name]()
+        if profile and i == 0:
+            import jax
+            with jax.profiler.trace(PROFILE_DIR):
+                suites[name]()
+            print(f"bench.profile,{name},{PROFILE_DIR}", flush=True)
+        else:
+            suites[name]()
         dt = time.perf_counter() - t0
         pts = sweep.POINTS_RUN - p0
         print(f"bench.summary,{name},wall_s={dt:.1f},points={pts},"

@@ -1,6 +1,6 @@
 """Simulator performance microbenchmark.
 
-Reports, on a fixed 8-point grid (2 fabrics x 4 loads, 4C4M):
+Reports, on a fixed 8-point open-loop grid (2 fabrics x 4 loads, 4C4M):
 
 - single-point simulated cycles per second (scatter-free engine),
 - sequential points/sec: a Python loop over ``run_point`` (one XLA launch
@@ -13,11 +13,25 @@ Reports, on a fixed 8-point grid (2 fabrics x 4 loads, 4C4M):
   this engine (scatter-free step + batching + device sharding); batched-vs-
   sequential isolates the batching/sharding share on the same step.
 
-A correctness line asserts batched metrics == sequential metrics.  All
-numbers are also written to ``BENCH_simspeed.json`` (uploaded as a CI
-artifact) so the perf trajectory is tracked run over run.
+Chunked-execution rows (ISSUE 5): the same open-loop grid — whose traffic
+spans its whole budget, so early exit never fires — is re-run through the
+monolithic fixed-length driver to price the chunked driver's overhead
+(``speedup_chunked_vs_mono_fixed``, expected ~1x), and a drain-heavy
+fig7-style trace grid (3 fabrics, one phase-barrier trace, a budget
+generous enough for the slowest fabric) is run through both drivers to
+measure the early-exit win (``speedup_chunked_vs_mono_drain`` — the
+batched-points/sec ratio the acceptance gate reads).  Per-lane drain
+cycles are emitted (``simspeed.drain`` rows) and recorded in the JSON.
+
+A correctness line asserts batched metrics == sequential metrics, and the
+drain grid's chunked metrics must equal its monolithic metrics exactly.
+All numbers are written to ``BENCH_simspeed.json`` (uploaded as a CI
+artifact) so the perf trajectory is tracked run over run.  CI smoke gate:
+``REPRO_MIN_PPS`` sets a soft floor on batched open-loop points/sec
+(warn-only unless ``REPRO_MIN_PPS_HARD=1``).
 """
 import json
+import os
 import time
 
 from repro.core import simulator, simulator_ref, traffic
@@ -25,6 +39,7 @@ from repro.core.constants import DEFAULT_PHY, Fabric, SimParams
 from repro.core.routing import compute_routing
 from repro.core.sweep import SweepPoint, run_point, run_sweep_batched
 from repro.core.topology import build_xcym
+from repro.workloads.trace import Trace, mcast, p2p, phase
 
 from benchmarks.common import emit
 
@@ -35,11 +50,55 @@ GRID = [(fab, load)
 REF_POINTS = 2          # reference engine is slow; extrapolate points/sec
 JSON_PATH = "BENCH_simspeed.json"
 
+# Drain-heavy grid: one phase-barrier trace per fabric with a budget
+# generous enough for the slowest lane (every lane of a fixed-budget
+# launch used to pay it in full); the wireless fabric drains in a small
+# fraction of it — exactly the fig7/fig8 shape where the early-exit
+# driver wins.  SUBSTRATE is excluded to keep the CI smoke short: its
+# replicated-unicast expansion of the multicasts needs a far larger
+# budget (fig7 uses 96k cycles), which the monolithic baseline would pay
+# in full.
+DRAIN_SIM = SimParams(cycles=12_000, warmup=0)
+DRAIN_TRACE = Trace("simspeed-drain", 8, [
+    phase([mcast(0, (2, 3, 4, 5), 1024.0), p2p(1, 6, 512.0)], label="a"),
+    phase([p2p(6, 1, 256.0), p2p(3, 0, 256.0)], label="b"),
+    phase([mcast(4, (0, 1, 2), 512.0)], label="c"),
+])
+DRAIN_FABRICS = (Fabric.WIRELESS, Fabric.INTERPOSER)
+
+
+def _pps_floor(rec: dict) -> None:
+    """Soft CI gate: batched open-loop points/sec above an env floor."""
+    floor = float(os.environ.get("REPRO_MIN_PPS", "0.2"))
+    pps = rec["batched_points_per_sec"]
+    ok = pps >= floor
+    emit(f"simspeed.check,pps_floor,{pps:.3f}>={floor}:{'pass' if ok else 'FAIL'}")
+    if not ok and os.environ.get("REPRO_MIN_PPS_HARD", "") == "1":
+        raise SystemExit(
+            f"simspeed: {pps:.3f} points/sec under hard floor {floor}")
+
+
+def _dump(rec: dict) -> None:
+    with open(JSON_PATH, "w") as f:
+        json.dump({k: round(v, 4) if isinstance(v, float) else v
+                   for k, v in rec.items()}, f, indent=1, sort_keys=True)
+    emit(f"simspeed,json,{JSON_PATH}")
+
 
 def main() -> None:
+    # the JSON is written even when a hard gate below aborts the run —
+    # the perf-trajectory artifact matters most on exactly those runs
+    rec: dict = {}
+    try:
+        _main(rec)
+    finally:
+        _dump(rec)
+
+
+def _main(rec: dict) -> None:
     pts = [SweepPoint(4, 4, fab, load=load, sim=SIM) for fab, load in GRID]
     G = len(pts)
-    rec: dict = {"grid_points": G, "cycles": SIM.cycles}
+    rec.update(grid_points=G, cycles=SIM.cycles)
 
     # single-point cycle rate (continuity with the seed's simspeed output)
     topo = build_xcym(4, 4, Fabric.WIRELESS)
@@ -86,6 +145,63 @@ def main() -> None:
     emit(f"simspeed,seq_points_per_sec,{G/t_seq:.3f}")
     emit(f"simspeed,batched_points_per_sec,{G/t_bat:.3f}")
 
+    # chunked-vs-monolithic on the SAME fixed-length open-loop grid: the
+    # traffic spans the whole budget, so this prices pure driver overhead
+    run_sweep_batched(pts, driver="monolithic")      # compile
+    t0 = time.perf_counter()
+    ms_mono = run_sweep_batched(pts, driver="monolithic")
+    t_mono = time.perf_counter() - t0
+    same = all(a.flits_delivered == b.flits_delivered
+               and a.throughput == b.throughput
+               for a, b in zip(ms_bat, ms_mono))
+    emit(f"simspeed.check,chunked_equals_mono_fixed,{same}")
+    if not same:
+        raise SystemExit("simspeed: chunked diverged from monolithic")
+    rec["mono_fixed_points_per_sec"] = G / t_mono
+    rec["speedup_chunked_vs_mono_fixed"] = t_mono / t_bat
+    emit(f"simspeed,mono_fixed_points_per_sec,{G/t_mono:.3f}")
+    emit(f"simspeed,speedup_chunked_vs_mono_fixed,{t_mono/t_bat:.2f}")
+
+    # drain-heavy trace grid: early-exit win (the acceptance metric)
+    dpts = [SweepPoint(4, 4, fab, trace=DRAIN_TRACE, sim=DRAIN_SIM,
+                       name=f"drain/{fab.name.lower()}")
+            for fab in DRAIN_FABRICS]
+    Gd = len(dpts)
+    run_sweep_batched(dpts)                  # compile
+    t0 = time.perf_counter()
+    ms_dr = run_sweep_batched(dpts)
+    t_dr = time.perf_counter() - t0
+    run_sweep_batched(dpts, driver="monolithic")     # compile
+    t0 = time.perf_counter()
+    ms_drm = run_sweep_batched(dpts, driver="monolithic")
+    t_drm = time.perf_counter() - t0
+    same = all(a.flits_delivered == b.flits_delivered
+               and a.pkts_delivered == b.pkts_delivered
+               and a.avg_pkt_energy_pj == b.avg_pkt_energy_pj
+               and a.phase_end == b.phase_end
+               for a, b in zip(ms_dr, ms_drm))
+    emit(f"simspeed.check,chunked_equals_mono_drain,{same}")
+    if not same:
+        raise SystemExit("simspeed: drain-grid chunked != monolithic")
+    drains = {}
+    for m in ms_dr:
+        if not m.trace_done:
+            raise SystemExit(f"simspeed: drain trace incomplete on {m.name}")
+        emit(f"simspeed.drain,{m.name},{m.drain_cycle},{m.cycles_run}")
+        drains[m.name] = m.drain_cycle
+    rec["drain_cycles"] = drains
+    rec["drain_budget"] = DRAIN_SIM.cycles
+    rec["drain_points_per_sec"] = Gd / t_dr
+    rec["mono_drain_points_per_sec"] = Gd / t_drm
+    rec["speedup_chunked_vs_mono_drain"] = t_drm / t_dr
+    emit(f"simspeed,drain_points_per_sec,{Gd/t_dr:.3f}")
+    emit(f"simspeed,mono_drain_points_per_sec,{Gd/t_drm:.3f}")
+    emit(f"simspeed,speedup_chunked_vs_mono_drain,{t_drm/t_dr:.2f}")
+    if t_drm / t_dr < 1.2:
+        raise SystemExit(
+            f"simspeed: early-exit win {t_drm/t_dr:.2f}x under 1.2x — the "
+            "drain predicate is not firing (or chunk overhead exploded)")
+
     # reference engine (the seed's scatter/segment step, per-point launches)
     ref = []
     for fab, load in GRID[:REF_POINTS]:
@@ -107,10 +223,7 @@ def main() -> None:
     emit(f"simspeed,speedup_batched_vs_seq,{t_seq/t_bat:.2f}")
     emit(f"simspeed,speedup_batched_vs_ref_seq,{t_ref*G/t_bat:.2f}")
     emit(f"simspeed,speedup_seq_vs_ref_seq,{t_ref*G/t_seq:.2f}")
-    with open(JSON_PATH, "w") as f:
-        json.dump({k: round(v, 4) if isinstance(v, float) else v
-                   for k, v in rec.items()}, f, indent=1, sort_keys=True)
-    emit(f"simspeed,json,{JSON_PATH}")
+    _pps_floor(rec)
 
 
 if __name__ == "__main__":

@@ -81,6 +81,12 @@ class Metrics:
     wl_rate_hist: dict = dataclasses.field(default_factory=dict)
     #                                 rate name -> delivered flits
     retx_energy_share: float = 0.0   # failed-attempt share of link energy
+    # chunked-execution driver metadata (ISSUE 5): the lane's semantic
+    # cycle budget (what ``throughput`` etc. normalize by) and where the
+    # drain-aware while_loop actually stopped simulating (chunk
+    # granularity; == cycles_run when the lane never drained early)
+    cycles_run: int = 0
+    drain_cycle: int = 0
 
     @property
     def trace_done(self) -> bool:
@@ -161,7 +167,10 @@ def compute_metrics_batch(pss: Sequence[PackedSim], st: SimState,
     for g, ps in enumerate(pss):
         phy: PhyParams = ps.phy
         sim: SimParams = ps.sim
-        cyc = cycles or sim.cycles
+        # an explicit analysis window wins; otherwise the lane's own
+        # budget as the driver recorded it (per-lane traced data since
+        # ISSUE 5 — lanes of one batch may differ)
+        cyc = cycles or int(st.cycles_run[g]) or sim.cycles
         window = cyc - sim.warmup
         bits = phy.flit_bits
         energy = float(el[g]) + float(es[g]) + float(ec[g]) + float(er[g])
@@ -257,6 +266,8 @@ def compute_metrics_batch(pss: Sequence[PackedSim], st: SimState,
                          for x in np.asarray(st.phase_flits[g])[:n_ph]],
             wl_tx_flits=int(st.wl_tx_flits[g]),
             wl_rx_flits=int(st.wl_rx_flits[g]),
+            cycles_run=cyc,
+            drain_cycle=int(st.drain_cycle[g]),
             **phykw,
             **memkw,
         ))

@@ -149,6 +149,25 @@ array argument*, so one XLA compilation serves all topologies, fabrics and
 traffic tables of the same bucket shape.  ``pack(..., floors=...)`` lets
 callers raise the padded dims so heterogeneous points (e.g. different
 fabrics) land on one shape and can share a batch.
+
+Drain-aware chunked execution (ISSUE 5; see core/chunked.py)
+------------------------------------------------------------
+The default driver is no longer one monolithic ``lax.scan(cycles)`` but
+an outer ``lax.while_loop`` over ``CHUNK_CYCLES``-sized scan chunks with
+a between-chunk drain predicate: a lane whose traffic has fully drained
+(trace phases closed, closed-loop windows back to zero, no future
+births) exits early and the remaining cycles' awake/sleep accounting is
+added in closed form — bitwise-identical to the fixed-length run.  The
+cycle budget is traced (``SimStatic.cycles``), so points that differ
+only in budget share one compile and one batch; each lane freezes
+exactly at its own budget via a per-cycle ``lax.cond``.  The scan carry
+is slimmed: small-enum fields (VC indices, ARQ attempts, the arrival
+pipes, injection burst counters) are i8/i16, and the closed-loop /
+lossy-PHY state blocks collapse to placeholder scalars when their path
+is not compiled (``mem_on``/``phy_on`` are already in the shape key).
+The jitted drivers donate the freshly initialized state into the loop.
+``run(..., driver="monolithic")`` keeps the old single-scan driver as a
+differential oracle for tests and ``benchmarks/simspeed``.
 """
 from __future__ import annotations
 
@@ -160,6 +179,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import chunked
+from repro.core.chunked import CHUNK_CYCLES
 from repro.core.constants import (WMAX, LinkClass, MacMode, PhyParams,
                                   SimParams)
 from repro.core.routing import RoutingTables
@@ -218,6 +239,8 @@ class SimStatic(NamedTuple):
     # scalars (traced => shared compile)
     pkt_len: jnp.ndarray     # int32
     warmup: jnp.ndarray      # int32
+    cycles: jnp.ndarray      # int32 per-lane cycle budget (traced: budgets
+    #                          batch freely; the chunked driver loops on it)
     serv_wl: jnp.ndarray     # int32 rx service cycles per flit
     lat_wl: jnp.ndarray      # int32
     ctrl_cycles: jnp.ndarray  # int32 control-packet duration
@@ -331,31 +354,51 @@ class SimState(NamedTuple):
     wl_pkts: jnp.ndarray      # packets that crossed the air (CRC pass)
     wl_nacks: jnp.ndarray     # failed attempts (NACK events)
     pkts_dropped: jnp.ndarray  # packets dropped at max_retx
+    # driver metadata (filled by the chunked/monolithic drivers, not the
+    # step): the lane's semantic cycle budget and where the outer loop
+    # actually stopped (chunk granularity; == budget without early drain)
+    cycles_run: jnp.ndarray   # scalar i32
+    drain_cycle: jnp.ndarray  # scalar i32
 
 
 def init_state(B: int, N: int, P: int = 1, K: int = 1, Y: int = 1,
-               BK: int = 1) -> SimState:
-    i32 = jnp.int32
-    zBV = jnp.zeros((B, V), i32)
+               BK: int = 1, mem_on: bool = False,
+               phy_on: bool = False) -> SimState:
+    """Zero state.  Carry slimming (ISSUE 5): small-enum per-slot fields
+    are i8/i16 (both engines agree, so the differential tests compare
+    bitwise), and the closed-loop memory / lossy-PHY state blocks shrink
+    to placeholder scalars when their path is not compiled — the step
+    only reads them under the matching static flag, and ``mem_on`` /
+    ``phy_on`` are already part of the batch shape key."""
+    i32, i16, i8 = jnp.int32, jnp.int16, jnp.int8
+
+    def zBV():
+        # a fresh buffer per leaf: the jitted drivers donate the state,
+        # and XLA rejects donating one aliased buffer twice
+        return jnp.zeros((B, V), i32)
+
+    NK = (N, K) if mem_on else (1, 1)
+    YCB = (Y, MEM_CH, BK) if mem_on else (1, 1, 1)
+    WW = (WMAX, WMAX) if phy_on else (1, 1)
     return SimState(
-        pkt_src=jnp.full((B, V), -1, i32), pkt_idx=zBV, pkt_dst=zBV, born=zBV,
-        out_o=zBV, out_buf=zBV, out_wo=zBV,
+        pkt_src=jnp.full((B, V), -1, i32), pkt_idx=zBV(), pkt_dst=zBV(),
+        born=zBV(), out_o=zBV(), out_buf=zBV(), out_wo=zBV(),
         out_is_wl=jnp.zeros((B, V), bool), out_is_ej=jnp.zeros((B, V), bool),
-        out_vc=jnp.full((B, V), -1, i32),
-        phase2=jnp.zeros((B, V), bool), rcvd=zBV, sent=zBV,
+        out_vc=jnp.full((B, V), -1, i8),
+        phase2=jnp.zeros((B, V), bool), rcvd=zBV(), sent=zBV(),
         src_of=jnp.full((B, V), -1, i32), mc_id=jnp.full((B, V), -1, i32),
-        attempt=jnp.zeros((B, V), i32),
-        pipe=jnp.zeros((B, V, DMAX), i32), busy_until=jnp.zeros((B,), i32),
+        attempt=jnp.zeros((B, V), i16),
+        pipe=jnp.zeros((B, V, DMAX), i8), busy_until=jnp.zeros((B,), i32),
         wl_busy_until=jnp.int32(0),
-        pair_busy=jnp.zeros((WMAX, WMAX), i32),
-        q_head=jnp.zeros((N,), i32), inj_vc=jnp.full((N,), -1, i32),
-        inj_pushed=jnp.zeros((N,), i32),
+        pair_busy=jnp.zeros(WW, i32),
+        q_head=jnp.zeros((N,), i32), inj_vc=jnp.full((N,), -1, i8),
+        inj_pushed=jnp.zeros((N,), i16),
         cur_phase=jnp.int32(0), phase_del=jnp.int32(0),
         phase_end=jnp.zeros((P,), i32), phase_flits=jnp.zeros((P,), i32),
-        rdy=jnp.full((N, K), NO_PKT, i32),
-        dead=jnp.zeros((N, K), bool), outst=jnp.zeros((N,), i32),
-        bank_busy=jnp.zeros((Y, MEM_CH, BK), i32),
-        bank_row=jnp.full((Y, MEM_CH, BK), -1, i32),
+        rdy=jnp.full(NK, NO_PKT, i32),
+        dead=jnp.zeros(NK, bool), outst=jnp.zeros((N,), i32),
+        bank_busy=jnp.zeros(YCB, i32),
+        bank_row=jnp.full(YCB, -1, i32),
         outst_peak=jnp.zeros((N,), i32),
         amat_sum=jnp.float32(0), amat_pkts=jnp.int32(0),
         mem_reads=jnp.zeros((Y,), i32), mem_writes=jnp.zeros((Y,), i32),
@@ -369,10 +412,11 @@ def init_state(B: int, N: int, P: int = 1, K: int = 1, Y: int = 1,
         ctrl_count=jnp.int32(0),
         wl_tx_flits=jnp.int32(0), wl_rx_flits=jnp.int32(0),
         awake_cycles=jnp.int32(0), sleep_cycles=jnp.int32(0),
-        wl_pair_flits=jnp.zeros((WMAX, WMAX), i32),
-        wl_fail_flits=jnp.zeros((WMAX, WMAX), i32),
+        wl_pair_flits=jnp.zeros(WW, i32),
+        wl_fail_flits=jnp.zeros(WW, i32),
         wl_pkts=jnp.int32(0), wl_nacks=jnp.int32(0),
         pkts_dropped=jnp.int32(0),
+        cycles_run=jnp.int32(0), drain_cycle=jnp.int32(0),
     )
 
 
@@ -433,7 +477,7 @@ def make_step(B: int, mem_on: bool = False, phy_on: bool = False):
         arrive = st.pipe[:, :, 0]
         rcvd = st.rcvd + arrive
         pipe = jnp.concatenate(
-            [st.pipe[:, :, 1:], jnp.zeros((B, V, 1), i32)], axis=2)
+            [st.pipe[:, :, 1:], jnp.zeros((B, V, 1), st.pipe.dtype)], axis=2)
 
         active = st.pkt_src >= 0
         occ = jnp.where(active, rcvd - st.sent, 0)
@@ -548,7 +592,7 @@ def make_step(B: int, mem_on: bool = False, phy_on: bool = False):
         src_of = upd(st.src_of, wsrc)
         # upstream learns its allocated VC (multicast: sentinel "granted";
         # delivery is receiver-side via src_of, no per-member VC needed)
-        out_vc = jnp.where(win_uni, first_free_c, out_vc)
+        out_vc = jnp.where(win_uni, first_free_c.astype(out_vc.dtype), out_vc)
         out_vc = jnp.where(win_mc, 0, out_vc)
 
         active = pkt_src >= 0
@@ -868,7 +912,8 @@ def make_step(B: int, mem_on: bool = False, phy_on: bool = False):
             incoming = incoming_any
         d_in = jnp.clip(lat_t.reshape(-1)[sv] - 1, 0, DMAX - 1)
         pipe = pipe + (incoming[:, :, None]
-                       & (jnp.arange(DMAX) == d_in[:, :, None])).astype(i32)
+                       & (jnp.arange(DMAX) == d_in[:, :, None])
+                       ).astype(pipe.dtype)
         # crossbar: wireless winners do not serialize the receiver
         ser_in = incoming_any & (~out_is_wl.reshape(-1)[sv] | ss.wl_rx_busy)
         serv_in = serv_t.reshape(-1)[sv]
@@ -1012,7 +1057,7 @@ def make_step(B: int, mem_on: bool = False, phy_on: bool = False):
         rcvd = jnp.where(icl, 0, rcvd)
         sent = jnp.where(icl, 0, sent)
         src_of = jnp.where(icl, -1, src_of)
-        inj_vc = jnp.where(can_new, ivc, st.inj_vc)
+        inj_vc = jnp.where(can_new, ivc.astype(st.inj_vc.dtype), st.inj_vc)
         inj_pushed = jnp.where(can_new, 0, st.inj_pushed)
         q_head = st.q_head + can_new.astype(i32)
         if mem_on and phy_on:
@@ -1032,7 +1077,7 @@ def make_step(B: int, mem_on: bool = False, phy_on: bool = False):
         can_push = (inj_vc >= 0) & (iocc < ss.b_depth[ib])
         pushc = (n_valid & gn(can_push))[:, None] & (gn(iv_c)[:, None] == vcol)
         rcvd = rcvd + pushc.astype(i32)
-        inj_pushed = inj_pushed + can_push.astype(i32)
+        inj_pushed = inj_pushed + can_push.astype(inj_pushed.dtype)
         flits_inj = st.flits_inj + post * can_push.sum().astype(i32)
         # the source's current packet sits at q_head - 1 (claims advance
         # the head); its per-slot length ends the push burst
@@ -1074,6 +1119,7 @@ def make_step(B: int, mem_on: bool = False, phy_on: bool = False):
             awake_cycles=awake_cycles, sleep_cycles=sleep_cycles,
             wl_pair_flits=wl_pair_flits, wl_fail_flits=wl_fail_flits,
             wl_pkts=wl_pkts, wl_nacks=wl_nacks, pkts_dropped=pkts_dropped,
+            cycles_run=st.cycles_run, drain_cycle=st.drain_cycle,
         )
 
     return step
@@ -1081,32 +1127,78 @@ def make_step(B: int, mem_on: bool = False, phy_on: bool = False):
 
 def _scan_point(ss: SimStatic, st: SimState, cycles: int, B: int,
                 mem_on: bool, phy_on: bool = False) -> SimState:
+    """Monolithic driver: one fixed-length scan (the pre-ISSUE-5 model).
+
+    Kept as a differential oracle: ``tests/test_chunked_exec.py`` and
+    ``benchmarks/simspeed.py`` pin the chunked driver against it.
+    """
     step = make_step(B, mem_on, phy_on)
 
     def body(carry, t):
         return step(ss, carry, t), None
 
     final, _ = jax.lax.scan(body, st, jnp.arange(cycles, dtype=jnp.int32))
-    return final
+    return final._replace(cycles_run=jnp.int32(cycles),
+                          drain_cycle=jnp.int32(cycles))
 
 
-@functools.partial(jax.jit, static_argnums=(2, 3, 4, 5))
-def _run_one(ss: SimStatic, st: SimState, cycles: int, B: int,
-             mem_on: bool = False, phy_on: bool = False) -> SimState:
-    return _scan_point(ss, st, cycles, B, mem_on, phy_on)
+def _chunk_point(ss: SimStatic, st: SimState, B: int, mem_on: bool,
+                 phy_on: bool, chunk: int) -> SimState:
+    """Chunked driver: while_loop to the lane's traced ``ss.cycles``."""
+    return chunked.run_chunked(make_step(B, mem_on, phy_on), ss, st,
+                               mem_on, chunk)
 
 
-@functools.partial(jax.jit, static_argnums=(2, 3, 4, 5))
-def _run_mapped(ss: SimStatic, st: SimState, cycles: int, B: int,
-                mem_on: bool = False, phy_on: bool = False) -> SimState:
-    """Sequentially map the per-point scan over a stacked batch.
+@functools.partial(jax.jit, static_argnums=(2, 3, 4, 5),
+                   donate_argnums=(1,))
+def _run_one(ss: SimStatic, st: SimState, B: int,
+             mem_on: bool = False, phy_on: bool = False,
+             chunk: int = CHUNK_CYCLES) -> SimState:
+    return _chunk_point(ss, st, B, mem_on, phy_on, chunk)
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3, 4, 5),
+                   donate_argnums=(1,))
+def _run_mapped(ss: SimStatic, st: SimState, B: int,
+                mem_on: bool = False, phy_on: bool = False,
+                chunk: int = CHUNK_CYCLES) -> SimState:
+    """Sequentially map the per-point driver over a stacked batch.
 
     ``lax.map`` (not ``vmap``): each point's computation is the *identical*
     program to the single-point path — bitwise-equal results — and on
     XLA:CPU, where every batched op scales linearly anyway, a vmapped step
     only adds lowering overhead.  The batch win comes from one dispatch for
-    the whole group and from sharding groups across devices (`_run_pmapped`).
+    the whole group and from sharding groups across devices
+    (`_run_pmapped`).  Under ``lax.map`` each lane's while_loop runs
+    sequentially, so every lane stops at its own drain/budget — early
+    exit needs no cross-lane agreement.
     """
+    return jax.lax.map(
+        lambda args: _chunk_point(args[0], args[1], B, mem_on, phy_on,
+                                  chunk),
+        (ss, st))
+
+
+@functools.partial(jax.pmap, static_broadcasted_argnums=(2, 3, 4, 5),
+                   donate_argnums=(1,))
+def _run_pmapped(ss: SimStatic, st: SimState, B: int,
+                 mem_on: bool = False, phy_on: bool = False,
+                 chunk: int = CHUNK_CYCLES) -> SimState:
+    return jax.lax.map(
+        lambda args: _chunk_point(args[0], args[1], B, mem_on, phy_on,
+                                  chunk),
+        (ss, st))
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3, 4, 5))
+def _run_one_mono(ss: SimStatic, st: SimState, cycles: int, B: int,
+                  mem_on: bool = False, phy_on: bool = False) -> SimState:
+    return _scan_point(ss, st, cycles, B, mem_on, phy_on)
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3, 4, 5))
+def _run_mapped_mono(ss: SimStatic, st: SimState, cycles: int, B: int,
+                     mem_on: bool = False, phy_on: bool = False) -> SimState:
     return jax.lax.map(
         lambda args: _scan_point(args[0], args[1], cycles, B, mem_on,
                                  phy_on),
@@ -1114,8 +1206,9 @@ def _run_mapped(ss: SimStatic, st: SimState, cycles: int, B: int,
 
 
 @functools.partial(jax.pmap, static_broadcasted_argnums=(2, 3, 4, 5))
-def _run_pmapped(ss: SimStatic, st: SimState, cycles: int, B: int,
-                 mem_on: bool = False, phy_on: bool = False) -> SimState:
+def _run_pmapped_mono(ss: SimStatic, st: SimState, cycles: int, B: int,
+                      mem_on: bool = False,
+                      phy_on: bool = False) -> SimState:
     return jax.lax.map(
         lambda args: _scan_point(args[0], args[1], cycles, B, mem_on,
                                  phy_on),
@@ -1424,6 +1517,7 @@ def pack(topo: Topology, rt: RoutingTables, tt: TrafficTable,
         src_switch=jnp.asarray(tt.src_switch.astype(np.int32)),
         births=jnp.asarray(births), dests=jnp.asarray(dests),
         pkt_len=jnp.int32(phy.pkt_flits), warmup=jnp.int32(sim.warmup),
+        cycles=jnp.int32(sim.cycles),
         serv_wl=jnp.int32(serv_wl),
         lat_wl=jnp.int32(pipe_stages + serv_wl),
         ctrl_cycles=jnp.int32(ctrl_cycles),
@@ -1471,8 +1565,9 @@ def _tree_stack(trees):
 
 
 def init_state_batch(G: int, B: int, N: int, P: int = 1, K: int = 1,
-                     Y: int = 1, BK: int = 1) -> SimState:
-    st = init_state(B, N, P, K, Y, BK)
+                     Y: int = 1, BK: int = 1, mem_on: bool = False,
+                     phy_on: bool = False) -> SimState:
+    st = init_state(B, N, P, K, Y, BK, mem_on, phy_on)
     return jax.tree_util.tree_map(
         lambda x: jnp.broadcast_to(x, (G,) + x.shape), st)
 
@@ -1484,14 +1579,23 @@ def _state_dims(ps: PackedSim) -> tuple:
             int(ps.ss.stack_sw.shape[0]), ps.dims.get("BK", 1))
 
 
+def _budgeted(ps: PackedSim, cycles: int | None) -> SimStatic:
+    """The point's static tables with an optional budget override."""
+    if cycles is None:
+        return ps.ss
+    return ps.ss._replace(cycles=jnp.int32(cycles))
+
+
 def run_batch(pss: Sequence[PackedSim], cycles: int | None = None,
-              devices: int | None = None) -> SimState:
-    """Run N same-bucket-shape points as one batched scan.
+              devices: int | None = None, driver: str = "chunked",
+              chunk: int = CHUNK_CYCLES) -> SimState:
+    """Run N same-bucket-shape points as one batched launch.
 
     Returns a ``SimState`` whose leaves carry a leading batch axis, ordered
     as ``pss``.  All points must share every padded array shape (use
-    ``pack(..., floors=...)`` to harmonize) and run for the same number of
-    cycles (warm-up may differ — it is a traced scalar).
+    ``pack(..., floors=...)`` to harmonize); cycle budgets and warm-ups
+    are traced per-lane data and may differ freely.  ``cycles`` overrides
+    every lane's budget when given.
 
     When the host exposes several XLA devices (e.g.
     ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` on CPU), the
@@ -1499,6 +1603,10 @@ def run_batch(pss: Sequence[PackedSim], cycles: int | None = None,
     repeating the last point and sliced off afterwards.  A batch of one
     takes the plain single-point path, so ``run_batch([ps]) == run(ps)``
     bitwise.
+
+    ``driver="monolithic"`` selects the fixed-length single-scan driver
+    (all lanes must then share one budget) — the differential oracle the
+    chunked default is pinned against.
     """
     if not pss:
         raise ValueError("run_batch needs at least one point")
@@ -1508,19 +1616,29 @@ def run_batch(pss: Sequence[PackedSim], cycles: int | None = None,
             raise ValueError(
                 "run_batch requires identical padded shapes; got "
                 f"{ps.dims} vs {pss[0].dims} — pack with harmonized floors")
-    cycles = cycles or pss[0].sim.cycles
+    mono = driver == "monolithic"
+    if mono:
+        budgets = {int(cycles or ps.sim.cycles) for ps in pss}
+        if len(budgets) != 1:
+            raise ValueError(
+                "monolithic driver needs one shared cycle budget; got "
+                f"{sorted(budgets)}")
+        mono_cycles = budgets.pop()
     B = pss[0].B
     sdims = _state_dims(pss[0])
     mem_on = pss[0].mem_on
     phy_on = pss[0].phy_on
     G = len(pss)
     if G == 1:
-        out = _run_one(pss[0].ss, init_state(*sdims), cycles, B, mem_on,
-                       phy_on)
+        st = init_state(*sdims, mem_on=mem_on, phy_on=phy_on)
+        out = _run_one_mono(pss[0].ss, st, mono_cycles, B, mem_on,
+                            phy_on) if mono else \
+            _run_one(_budgeted(pss[0], cycles), st, B, mem_on, phy_on,
+                     chunk)
         out = jax.tree_util.tree_map(lambda x: x[None], out)
         return jax.block_until_ready(out)
-    ss = _tree_stack([ps.ss for ps in pss])
-    st = init_state_batch(G, *sdims)
+    ss = _tree_stack([_budgeted(ps, cycles) for ps in pss])
+    st = init_state_batch(G, *sdims, mem_on=mem_on, phy_on=phy_on)
     D = devices if devices is not None else jax.local_device_count()
     D = min(D, G)
     if D > 1:
@@ -1530,22 +1648,35 @@ def run_batch(pss: Sequence[PackedSim], cycles: int | None = None,
                 lambda x: jnp.repeat(x[-1:], Gp - G, axis=0), ss)
             ss = jax.tree_util.tree_map(
                 lambda a, b: jnp.concatenate([a, b]), ss, pad)
-            st = init_state_batch(Gp, *sdims)
+            st = init_state_batch(Gp, *sdims, mem_on=mem_on, phy_on=phy_on)
         shard = jax.tree_util.tree_map(
             lambda x: x.reshape((D, Gp // D) + x.shape[1:]), ss)
         st_sh = jax.tree_util.tree_map(
             lambda x: x.reshape((D, Gp // D) + x.shape[1:]), st)
-        out = _run_pmapped(shard, st_sh, cycles, B, mem_on, phy_on)
+        out = _run_pmapped_mono(shard, st_sh, mono_cycles, B, mem_on,
+                                phy_on) if mono else \
+            _run_pmapped(shard, st_sh, B, mem_on, phy_on, chunk)
         out = jax.tree_util.tree_map(
             lambda x: x.reshape((Gp,) + x.shape[2:])[:G], out)
     else:
-        out = _run_mapped(ss, st, cycles, B, mem_on, phy_on)
+        out = _run_mapped_mono(ss, st, mono_cycles, B, mem_on, phy_on) \
+            if mono else _run_mapped(ss, st, B, mem_on, phy_on, chunk)
     return jax.block_until_ready(out)
 
 
-def run(ps: PackedSim, cycles: int | None = None) -> SimState:
-    """Single-point API (a batch of one; same step program as batches)."""
-    cycles = cycles or ps.sim.cycles
-    st = init_state(*_state_dims(ps))
+def run(ps: PackedSim, cycles: int | None = None, driver: str = "chunked",
+        chunk: int = CHUNK_CYCLES) -> SimState:
+    """Single-point API (a batch of one; same step program as batches).
+
+    ``driver="monolithic"`` runs the fixed-length scan oracle instead of
+    the drain-aware chunked while_loop (results are bitwise-equal; only
+    ``drain_cycle`` may differ — the oracle never exits early).
+    """
+    st = init_state(*_state_dims(ps), mem_on=ps.mem_on, phy_on=ps.phy_on)
+    if driver == "monolithic":
+        return jax.block_until_ready(
+            _run_one_mono(ps.ss, st, int(cycles or ps.sim.cycles), ps.B,
+                          ps.mem_on, ps.phy_on))
     return jax.block_until_ready(
-        _run_one(ps.ss, st, cycles, ps.B, ps.mem_on, ps.phy_on))
+        _run_one(_budgeted(ps, cycles), st, ps.B, ps.mem_on, ps.phy_on,
+                 chunk))

@@ -41,7 +41,9 @@ Implements wormhole switching with virtual channels (8 VCs x 16-flit input
 buffers), credit-equivalent backpressure, forwarding-table routing, the
 paper's control-packet wireless MAC with partial packet transmission
 (§III.D), and sleepy receivers [17] — all as one vectorized cycle step
-scanned over time with ``jax.lax.scan``.
+driven by the drain-aware chunked while_loop shared with the gather
+engine (``core/chunked.py``; ``driver="monolithic"`` keeps the original
+single fixed-length ``jax.lax.scan``).
 
 Data model
 ----------
@@ -92,6 +94,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import chunked
 from repro.core.constants import (WMAX, LinkClass, MacMode, PhyParams,
                                   SimParams)
 from repro.core.routing import RoutingTables
@@ -139,6 +142,7 @@ class SimStatic(NamedTuple):
     # scalars (traced => shared compile)
     pkt_len: jnp.ndarray     # int32
     warmup: jnp.ndarray      # int32
+    cycles: jnp.ndarray      # int32 per-lane cycle budget (traced)
     serv_wl: jnp.ndarray     # int32 rx service cycles per flit
     lat_wl: jnp.ndarray      # int32
     ctrl_cycles: jnp.ndarray  # int32 control-packet duration
@@ -246,31 +250,45 @@ class SimState(NamedTuple):
     wl_pkts: jnp.ndarray
     wl_nacks: jnp.ndarray
     pkts_dropped: jnp.ndarray
+    # driver metadata (see simulator.py / core/chunked.py)
+    cycles_run: jnp.ndarray   # scalar i32
+    drain_cycle: jnp.ndarray  # scalar i32
 
 
 def init_state(B: int, N: int, P: int = 1, K: int = 1, Y: int = 1,
-               BK: int = 1) -> SimState:
-    i32 = jnp.int32
-    zBV = jnp.zeros((B, V), i32)
+               BK: int = 1, mem_on: bool = False,
+               phy_on: bool = False) -> SimState:
+    """Zero state; same carry slimming as ``simulator.init_state`` (the
+    differential tests compare the two engines' states field by field)."""
+    i32, i16, i8 = jnp.int32, jnp.int16, jnp.int8
+
+    def zBV():
+        # a fresh buffer per leaf: the jitted driver donates the state,
+        # and XLA rejects donating one aliased buffer twice
+        return jnp.zeros((B, V), i32)
+
+    NK = (N, K) if mem_on else (1, 1)
+    YCB = (Y, MEM_CH, BK) if mem_on else (1, 1, 1)
+    WW = (WMAX, WMAX) if phy_on else (1, 1)
     return SimState(
-        pkt_src=jnp.full((B, V), -1, i32), pkt_idx=zBV, pkt_dst=zBV, born=zBV,
-        out_o=zBV, out_buf=zBV, out_wo=zBV,
+        pkt_src=jnp.full((B, V), -1, i32), pkt_idx=zBV(), pkt_dst=zBV(),
+        born=zBV(), out_o=zBV(), out_buf=zBV(), out_wo=zBV(),
         out_is_wl=jnp.zeros((B, V), bool), out_is_ej=jnp.zeros((B, V), bool),
-        out_vc=jnp.full((B, V), -1, i32),
-        phase2=jnp.zeros((B, V), bool), rcvd=zBV, sent=zBV,
+        out_vc=jnp.full((B, V), -1, i8),
+        phase2=jnp.zeros((B, V), bool), rcvd=zBV(), sent=zBV(),
         mc_id=jnp.full((B, V), -1, i32), mc_src=jnp.full((B, V), -1, i32),
-        attempt=jnp.zeros((B, V), i32),
-        pipe=jnp.zeros((B, V, DMAX), i32), busy_until=jnp.zeros((B,), i32),
+        attempt=jnp.zeros((B, V), i16),
+        pipe=jnp.zeros((B, V, DMAX), i8), busy_until=jnp.zeros((B,), i32),
         wl_busy_until=jnp.int32(0),
-        pair_busy=jnp.zeros((WMAX, WMAX), i32),
-        q_head=jnp.zeros((N,), i32), inj_vc=jnp.full((N,), -1, i32),
-        inj_pushed=jnp.zeros((N,), i32),
+        pair_busy=jnp.zeros(WW, i32),
+        q_head=jnp.zeros((N,), i32), inj_vc=jnp.full((N,), -1, i8),
+        inj_pushed=jnp.zeros((N,), i16),
         cur_phase=jnp.int32(0), phase_del=jnp.int32(0),
         phase_end=jnp.zeros((P,), i32), phase_flits=jnp.zeros((P,), i32),
-        rdy=jnp.full((N, K), NO_PKT, i32),
-        dead=jnp.zeros((N, K), bool), outst=jnp.zeros((N,), i32),
-        bank_busy=jnp.zeros((Y, MEM_CH, BK), i32),
-        bank_row=jnp.full((Y, MEM_CH, BK), -1, i32),
+        rdy=jnp.full(NK, NO_PKT, i32),
+        dead=jnp.zeros(NK, bool), outst=jnp.zeros((N,), i32),
+        bank_busy=jnp.zeros(YCB, i32),
+        bank_row=jnp.full(YCB, -1, i32),
         outst_peak=jnp.zeros((N,), i32),
         amat_sum=jnp.float32(0), amat_pkts=jnp.int32(0),
         mem_reads=jnp.zeros((Y,), i32), mem_writes=jnp.zeros((Y,), i32),
@@ -284,10 +302,11 @@ def init_state(B: int, N: int, P: int = 1, K: int = 1, Y: int = 1,
         ctrl_count=jnp.int32(0),
         wl_tx_flits=jnp.int32(0), wl_rx_flits=jnp.int32(0),
         awake_cycles=jnp.int32(0), sleep_cycles=jnp.int32(0),
-        wl_pair_flits=jnp.zeros((WMAX, WMAX), i32),
-        wl_fail_flits=jnp.zeros((WMAX, WMAX), i32),
+        wl_pair_flits=jnp.zeros(WW, i32),
+        wl_fail_flits=jnp.zeros(WW, i32),
         wl_pkts=jnp.int32(0), wl_nacks=jnp.int32(0),
         pkts_dropped=jnp.int32(0),
+        cycles_run=jnp.int32(0), drain_cycle=jnp.int32(0),
     )
 
 
@@ -328,7 +347,8 @@ def make_step(B: int, Wout: int, RXW: int = 1, mem_on: bool = False,
         arrive = st.pipe[:, :, 0]
         rcvd = st.rcvd + arrive
         pipe = jnp.concatenate(
-            [st.pipe[:, :, 1:], jnp.zeros((B, V, 1), i32)], axis=2)
+            [st.pipe[:, :, 1:], jnp.zeros((B, V, 1), st.pipe.dtype)],
+            axis=2)
 
         active = st.pkt_src >= 0
         occ = jnp.where(active, rcvd - st.sent, 0)
@@ -402,15 +422,16 @@ def make_step(B: int, Wout: int, RXW: int = 1, mem_on: bool = False,
         out_wo = claim(st.out_wo, d_owo.astype(i32))
         out_is_wl = claim(st.out_is_wl, d_owl)
         out_is_ej = claim(st.out_is_ej, d_oej)
-        out_vc = claim(st.out_vc, jnp.full((B, V), -1, i32))
+        out_vc = claim(st.out_vc, jnp.full((B, V), -1, st.out_vc.dtype))
         phase2 = claim(st.phase2, st.phase2 | tgt_rx)
         mc_id = claim(st.mc_id, st.mc_id)
         mc_src = claim(st.mc_src, jnp.full((B, V), -1, i32))
-        attempt = claim(st.attempt, jnp.zeros((B, V), i32))
+        attempt = claim(st.attempt, jnp.zeros((B, V), st.attempt.dtype))
         rcvd = claim(rcvd, jnp.zeros((B, V), i32))
         sent = claim(st.sent, jnp.zeros((B, V), i32))
         # upstream learns its allocated VC
-        out_vc = jnp.where(win, v_t.reshape(B, V), out_vc)
+        out_vc = jnp.where(win, v_t.reshape(B, V).astype(out_vc.dtype),
+                           out_vc)
 
         # multicast copy install: receiver-side, one copy per member rx
         # buffer of the full-group winner, each addressed to its per-WI
@@ -725,7 +746,8 @@ def make_step(B: int, Wout: int, RXW: int = 1, mem_on: bool = False,
         inc_mc = ident_mc & fwd.reshape(-1)[svm]                 # [B, V]
         d_in_mc = jnp.clip(lat_t.reshape(-1)[svm] - 1, 0, DMAX - 1)
         pipe = pipe + (inc_mc[:, :, None]
-                       & (jnp.arange(DMAX) == d_in_mc[:, :, None])).astype(i32)
+                       & (jnp.arange(DMAX) == d_in_mc[:, :, None])
+                       ).astype(pipe.dtype)
         # crossbar: wireless winners do not serialize the receiver
         bu_t = jnp.where(nej & ~is_mc2 & (~out_is_wl | ss.wl_rx_busy),
                          out_buf, B).reshape(-1)
@@ -852,14 +874,15 @@ def make_step(B: int, Wout: int, RXW: int = 1, mem_on: bool = False,
         out_wo = iclaim(out_wo, r_owo.astype(i32))
         out_is_wl = iclaim(out_is_wl, r_owl)
         out_is_ej = iclaim(out_is_ej, r_oej)
-        out_vc = iclaim(out_vc, jnp.full((N,), -1, i32))
+        out_vc = iclaim(out_vc, jnp.full((N,), -1, out_vc.dtype))
         phase2 = iclaim(phase2, jnp.zeros((N,), bool))
         mc_id = iclaim(mc_id, mcv_n)
         mc_src = iclaim(mc_src, jnp.full((N,), -1, i32))
-        attempt = iclaim(attempt, jnp.zeros((N,), i32))
+        attempt = iclaim(attempt, jnp.zeros((N,), attempt.dtype))
         rcvd = iclaim(rcvd, jnp.zeros((N,), i32))
         sent = iclaim(sent, jnp.zeros((N,), i32))
-        inj_vc = jnp.where(can_new, ivc, st.inj_vc)
+        inj_vc = jnp.where(can_new, ivc.astype(st.inj_vc.dtype),
+                           st.inj_vc)
         inj_pushed = jnp.where(can_new, 0, st.inj_pushed)
         q_head = st.q_head + can_new.astype(i32)
         if mem_on and phy_on:
@@ -878,7 +901,7 @@ def make_step(B: int, Wout: int, RXW: int = 1, mem_on: bool = False,
         can_push = (inj_vc >= 0) & (iocc < ss.b_depth[ib])
         pb_t = jnp.where(can_push, ib, B)
         rcvd = rcvd.at[pb_t, iv_c].add(1, mode="drop")
-        inj_pushed = inj_pushed + can_push.astype(i32)
+        inj_pushed = inj_pushed + can_push.astype(inj_pushed.dtype)
         flits_inj = st.flits_inj + post * can_push.sum().astype(i32)
         # the source's current packet sits at q_head - 1 (claims advance
         # the head); its per-slot length ends the push burst
@@ -920,22 +943,35 @@ def make_step(B: int, Wout: int, RXW: int = 1, mem_on: bool = False,
             awake_cycles=awake_cycles, sleep_cycles=sleep_cycles,
             wl_pair_flits=wl_pair_flits, wl_fail_flits=wl_fail_flits,
             wl_pkts=wl_pkts, wl_nacks=wl_nacks, pkts_dropped=pkts_dropped,
+            cycles_run=st.cycles_run, drain_cycle=st.drain_cycle,
         )
 
     return step
 
 
+@functools.partial(jax.jit, static_argnums=(2, 3, 4, 5, 6),
+                   donate_argnums=(1,))
+def _run(ss: SimStatic, st: SimState, B: int, Wout: int, RXW: int = 1,
+         mem_on: bool = False, phy_on: bool = False) -> SimState:
+    """Drain-aware chunked driver (shared with simulator.py; ISSUE 5)."""
+    return chunked.run_chunked(make_step(B, Wout, RXW, mem_on, phy_on),
+                               ss, st, mem_on)
+
+
 @functools.partial(jax.jit, static_argnums=(2, 3, 4, 5, 6, 7))
-def _run(ss: SimStatic, st: SimState, cycles: int, B: int,
-         Wout: int, RXW: int = 1, mem_on: bool = False,
-         phy_on: bool = False) -> SimState:
+def _run_mono(ss: SimStatic, st: SimState, cycles: int, B: int,
+              Wout: int, RXW: int = 1, mem_on: bool = False,
+              phy_on: bool = False) -> SimState:
+    """Monolithic fixed-length scan (the pre-ISSUE-5 driver), kept as a
+    differential oracle for ``tests/test_chunked_exec.py``."""
     step = make_step(B, Wout, RXW, mem_on, phy_on)
 
     def body(carry, t):
         return step(ss, carry, t), None
 
     final, _ = jax.lax.scan(body, st, jnp.arange(cycles, dtype=jnp.int32))
-    return final
+    return final._replace(cycles_run=jnp.int32(cycles),
+                          drain_cycle=jnp.int32(cycles))
 
 
 # --------------------------------------------------------------------------
@@ -1149,6 +1185,7 @@ def pack(topo: Topology, rt: RoutingTables, tt: TrafficTable,
         src_switch=jnp.asarray(tt.src_switch.astype(np.int32)),
         births=jnp.asarray(births), dests=jnp.asarray(dests),
         pkt_len=jnp.int32(phy.pkt_flits), warmup=jnp.int32(sim.warmup),
+        cycles=jnp.int32(sim.cycles),
         serv_wl=jnp.int32(serv_wl),
         lat_wl=jnp.int32(pipe_stages + serv_wl),
         ctrl_cycles=jnp.int32(ctrl_cycles),
@@ -1186,11 +1223,17 @@ def pack(topo: Topology, rt: RoutingTables, tt: TrafficTable,
                      phy_link=pli)
 
 
-def run(ps: PackedSim, cycles: int | None = None) -> SimState:
-    cycles = cycles or ps.sim.cycles
+def run(ps: PackedSim, cycles: int | None = None,
+        driver: str = "chunked") -> SimState:
     N, K = ps.ss.births.shape
     st = init_state(ps.B, int(N), int(ps.ss.phase_need.shape[0]),
-                    int(K), ps.Y, ps.BK)
+                    int(K), ps.Y, ps.BK, mem_on=ps.mem_on,
+                    phy_on=ps.phy_on)
+    if driver == "monolithic":
+        return jax.block_until_ready(
+            _run_mono(ps.ss, st, int(cycles or ps.sim.cycles), ps.B,
+                      ps.Wout, ps.RXW, ps.mem_on, ps.phy_on))
+    ss = ps.ss if cycles is None else ps.ss._replace(
+        cycles=jnp.int32(cycles))
     return jax.block_until_ready(
-        _run(ps.ss, st, cycles, ps.B, ps.Wout, ps.RXW, ps.mem_on,
-             ps.phy_on))
+        _run(ss, st, ps.B, ps.Wout, ps.RXW, ps.mem_on, ps.phy_on))

@@ -15,13 +15,18 @@ Two APIs:
 
 Grouping rules (see README "Batched sweeps"): points can share a group iff
 they have the same number of traffic sources N (padded shapes [N, K] only
-harmonize over K) and the same simulated cycle count (the scan length is a
-static compile parameter; warm-up is traced and may differ).  Everything
-else — fabric, topology, loads, seeds, PHY values, MAC mode, medium — is
-traced data and batches freely.  Trace points (``SweepPoint(trace=...)``,
+harmonize over K).  Everything else — fabric, topology, loads, seeds, PHY
+values, MAC mode, medium, cycle budget, warm-up — is traced data and
+batches freely.  Since the drain-aware chunked driver (ISSUE 5) the cycle
+budget is per-lane traced data (``SimStatic.cycles``), so points that
+differ only in ``sim.cycles`` merge into one launch and one compile; each
+lane freezes exactly at its own budget, and lanes whose traffic drains
+early stop simulating entirely.  Trace points (``SweepPoint(trace=...)``,
 see ``workloads``) follow the same rules: one trace emitted on the three
 fabrics keeps N constant by construction, so a whole trace-figure row is
 one launch; multicast-group and phase dims (M, P) harmonize like the rest.
+(``mem_on``/``phy_on`` still split groups — they select different
+compiled steps, which the defensive shape_key split below enforces.)
 """
 from __future__ import annotations
 
@@ -126,13 +131,16 @@ def _build_point(p: SweepPoint):
 
 def run_sweep_batched(points: Sequence[SweepPoint],
                       cycles: int | None = None,
-                      devices: int | None = None) -> list[Metrics]:
+                      devices: int | None = None,
+                      driver: str = "chunked") -> list[Metrics]:
     """Simulate a grid of points in as few XLA launches as possible.
 
     Returns one ``Metrics`` per point, in input order.  Results are equal
     (bitwise, not merely allclose) to ``[run_point(...) for each point]``:
     batching only changes how many points ride in one launch, never the
-    per-point program.
+    per-point program.  ``driver="monolithic"`` forces the fixed-length
+    scan oracle (see ``simulator.run_batch``) — used by
+    ``benchmarks/simspeed`` and the chunked-execution tests.
     """
     global POINTS_RUN
     POINTS_RUN += len(points)
@@ -140,10 +148,11 @@ def run_sweep_batched(points: Sequence[SweepPoint],
     natural = [simulator.pack_dims(topo, tt)
                for topo, _, tt, _ in built]
 
-    # group by (N sources, scan length); harmonize pack dims within a group
+    # group by N sources (cycle budgets are traced per-lane data and batch
+    # freely); harmonize pack dims within a group
     groups: dict[tuple, list[int]] = {}
     for i, (p, (_, _, tt, _)) in enumerate(zip(points, built)):
-        key = (tt.n_sources, cycles or p.sim.cycles)
+        key = (tt.n_sources,)
         groups.setdefault(key, []).append(i)
 
     results: list[Metrics | None] = [None] * len(points)
@@ -162,7 +171,8 @@ def run_sweep_batched(points: Sequence[SweepPoint],
             by_shape.setdefault(packed[i].shape_key(), []).append(i)
         for sub in by_shape.values():
             pss = [packed[i] for i in sub]
-            st = simulator.run_batch(pss, cycles=cycles, devices=devices)
+            st = simulator.run_batch(pss, cycles=cycles, devices=devices,
+                                     driver=driver)
             ms = compute_metrics_batch(
                 pss, st, [built[i][3] for i in sub],
                 [built[i][2].offered_load for i in sub], cycles=cycles)

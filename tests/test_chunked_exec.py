@@ -1,0 +1,184 @@
+"""Drain-aware chunked execution (ISSUE 5): chunked == monolithic bitwise.
+
+The default driver is an outer ``lax.while_loop`` over fixed-size scan
+chunks with per-lane traced cycle budgets and a between-chunk drain
+predicate (``core/chunked.py``).  These tests pin it against the
+monolithic fixed-length scan oracle (``driver="monolithic"``):
+
+- bitwise state equality across media/MAC modes and the mem_on / phy_on /
+  trace step variants, including points whose traffic drains long before
+  the budget (early exit + closed-form awake/sleep remainder);
+- a lane's stats freeze exactly at its budget even when the budget ends
+  mid-chunk and other lanes in the batch keep running;
+- mixed-cycle-count lanes share one launch and equal their solo runs.
+
+``drain_cycle`` is driver metadata (where the while_loop stopped) and is
+the only field allowed to differ from the oracle, which never exits early.
+"""
+import numpy as np
+import pytest
+
+from repro.core import simulator, simulator_ref, traffic
+from repro.core.chunked import CHUNK_CYCLES
+from repro.core.constants import (DEFAULT_PHY, Fabric, MacMode, PhyParams,
+                                  SimParams)
+from repro.core.routing import compute_routing
+from repro.core.sweep import SweepPoint, run_point, run_sweep_batched
+from repro.core.topology import build_xcym
+from repro.workloads.trace import Trace, mcast, p2p, phase
+
+META_FIELDS = {"drain_cycle"}
+
+
+def _assert_states_equal(a, b, skip=META_FIELDS):
+    for f in a._fields:
+        if f in skip or f not in b._fields:
+            continue
+        x = np.asarray(getattr(a, f))
+        y = np.asarray(getattr(b, f))
+        assert np.array_equal(x, y), f"field {f} diverged"
+
+
+def _system(fabric=Fabric.WIRELESS, phy=DEFAULT_PHY):
+    topo = build_xcym(4, 4, fabric)
+    return topo, compute_routing(topo)
+
+
+_DRAIN_TRACE = Trace("drain", 8, [
+    phase([mcast(0, (2, 3, 4, 5), 2048.0), p2p(1, 6, 1024.0)], label="a"),
+    phase([p2p(6, 1, 512.0), p2p(3, 0, 512.0)], label="b"),
+])
+
+
+def _point(case: str):
+    """(topo, rt, tt, phy, sim, phy_spec) for one step-variant case."""
+    phy, sim, phy_spec = DEFAULT_PHY, SimParams(cycles=700, warmup=100), None
+    if case == "single":
+        phy = PhyParams(wireless_medium="single", wireless_flit_cycles=5)
+    elif case == "token":
+        sim = SimParams(cycles=700, warmup=100, mac=MacMode.TOKEN)
+    topo, rt = _system(phy=phy)
+    if case == "mem_on":
+        from repro.memory import closed_loop_uniform
+        # generation window << budget: the drain predicate must fire
+        sim = SimParams(cycles=3000, warmup=100)
+        tt = closed_loop_uniform(topo, 0.3, 600, phy.pkt_flits, seed=2)
+    elif case == "phy_on":
+        from repro.phy import PhySweepSpec
+        sim = SimParams(cycles=2500, warmup=0)
+        tt = traffic.uniform_random(topo, 0.3, 0.2, 600, phy.pkt_flits,
+                                    seed=3)
+        phy_spec = PhySweepSpec(link_budget_db=-4.0)
+    elif case == "trace":
+        sim = SimParams(cycles=6000, warmup=0)
+        tt = traffic.from_trace(topo, _DRAIN_TRACE, phy.pkt_flits)
+    else:
+        tt = traffic.uniform_random(topo, 0.5, 0.2, sim.cycles,
+                                    phy.pkt_flits, seed=1)
+    return topo, rt, tt, phy, sim, phy_spec
+
+
+CASES = ["crossbar", "single", "token", "mem_on", "phy_on", "trace"]
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_chunked_equals_monolithic(case):
+    topo, rt, tt, phy, sim, phy_spec = _point(case)
+    ps = simulator.pack(topo, rt, tt, phy, sim, phy_spec=phy_spec)
+    a = simulator.run(ps)
+    b = simulator.run(ps, driver="monolithic")
+    _assert_states_equal(a, b)
+    assert int(a.flits_inj) > 0
+    assert int(a.cycles_run) == sim.cycles
+    assert int(b.drain_cycle) == sim.cycles          # oracle: no early exit
+    if case in ("mem_on", "trace"):
+        # these points drain long before the budget — the predicate fired
+        assert int(a.drain_cycle) < sim.cycles
+
+
+@pytest.mark.parametrize("case", ["crossbar", "mem_on", "trace"])
+def test_chunked_equals_monolithic_ref_engine(case):
+    """The reference engine shares the chunk driver and agrees bitwise."""
+    topo, rt, tt, phy, sim, phy_spec = _point(case)
+    pr = simulator_ref.pack(topo, rt, tt, phy, sim, phy_spec=phy_spec)
+    a = simulator_ref.run(pr)
+    b = simulator_ref.run(pr, driver="monolithic")
+    _assert_states_equal(a, b)
+    # and against the gather engine, drain metadata included
+    pg = simulator.pack(topo, rt, tt, phy, sim, phy_spec=phy_spec)
+    g = simulator.run(pg)
+    _assert_states_equal(a, g, skip={"out_wo", "mc_src"})
+
+
+def test_budget_freezes_mid_chunk():
+    """A budget that is not a chunk multiple freezes stats exactly there."""
+    topo, rt = _system()
+    assert 777 % CHUNK_CYCLES != 0
+    sim = SimParams(cycles=777, warmup=100)
+    tt = traffic.uniform_random(topo, 0.5, 0.2, sim.cycles, 64, seed=4)
+    ps = simulator.pack(topo, rt, tt, DEFAULT_PHY, sim)
+    _assert_states_equal(simulator.run(ps),
+                         simulator.run(ps, driver="monolithic"))
+
+
+def test_chunk_size_invariance():
+    """Chunk size is an execution detail — results are bitwise-identical."""
+    topo, rt = _system()
+    sim = SimParams(cycles=700, warmup=100)
+    tt = traffic.uniform_random(topo, 0.5, 0.2, sim.cycles, 64, seed=5)
+    ps = simulator.pack(topo, rt, tt, DEFAULT_PHY, sim)
+    a = simulator.run(ps, chunk=32)
+    b = simulator.run(ps, chunk=256)
+    _assert_states_equal(a, b)
+
+
+def test_finished_lane_frozen_in_mixed_budget_batch():
+    """A lane whose budget ends while batchmates keep running accumulates
+    nothing past its budget: its metrics equal a solo run at that budget,
+    and the longer lane equals its own solo run."""
+    sims = [SimParams(cycles=512, warmup=128),
+            SimParams(cycles=2048, warmup=128)]
+    pts = [SweepPoint(4, 4, Fabric.WIRELESS, load=0.4, sim=s) for s in sims]
+    batched = run_sweep_batched(pts)
+    for p, b in zip(pts, batched):
+        s = run_point(4, 4, p.fabric, p.load, sim=p.sim)
+        assert b.flits_delivered == s.flits_delivered
+        assert b.flits_injected == s.flits_injected
+        assert b.pkts_delivered == s.pkts_delivered
+        assert b.throughput == s.throughput
+        assert b.avg_pkt_energy_pj == s.avg_pkt_energy_pj
+        assert b.cycles_run == s.cycles_run == p.sim.cycles
+
+
+def test_mixed_budgets_share_one_launch():
+    """Points differing only in sim.cycles land in one group (the old
+    grouping rule split them): one run_batch call serves both."""
+    from repro.core import sweep as sweep_mod
+
+    calls = []
+    orig = simulator.run_batch
+
+    def spy(pss, **kw):
+        calls.append(len(pss))
+        return orig(pss, **kw)
+
+    pts = [SweepPoint(4, 4, Fabric.WIRELESS, load=0.3,
+                      sim=SimParams(cycles=c, warmup=64))
+           for c in (384, 640)]
+    try:
+        simulator.run_batch, sweep_mod.simulator.run_batch = spy, spy
+        run_sweep_batched(pts)
+    finally:
+        simulator.run_batch = sweep_mod.simulator.run_batch = orig
+    assert calls == [2], f"expected one 2-lane launch, got {calls}"
+
+
+def test_monolithic_rejects_mixed_budgets():
+    topo, rt = _system()
+    pss = []
+    for c in (384, 640):
+        sim = SimParams(cycles=c, warmup=64)
+        tt = traffic.uniform_random(topo, 0.3, 0.2, c, 64, seed=6)
+        pss.append(simulator.pack(topo, rt, tt, DEFAULT_PHY, sim))
+    with pytest.raises(ValueError, match="budget"):
+        simulator.run_batch(pss, driver="monolithic")
