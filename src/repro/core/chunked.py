@@ -104,13 +104,27 @@ def _finalize(ss, st, stop: jnp.ndarray):
         drain_cycle=jnp.minimum(stop, cycles).astype(jnp.int32))
 
 
-def run_chunked(step, ss, st, mem_on: bool, chunk: int = CHUNK_CYCLES):
+def run_chunked(step, ss, st, mem_on: bool, chunk: int = CHUNK_CYCLES,
+                window_fn=None):
     """Drive ``step`` to the lane's traced budget with early drain exit.
 
     ``step(ss, st, t) -> st`` is either engine's compiled cycle step; the
     returned state is bitwise-equal to a monolithic ``lax.scan`` of
     ``ss.cycles`` steps (plus the ``cycles_run``/``drain_cycle`` driver
     metadata, which the monolithic driver also fills).
+
+    ``window_fn(st, t) -> st`` is the living-channel boundary update the
+    step applies at every ``t % CHUNK_CYCLES == 0`` (``phy.living`` —
+    the window cadence is this fixed semantic constant, NOT the driver's
+    execution ``chunk``, so custom chunk sizes and the monolithic oracle
+    agree on when the channel moves).  A pure function of the window
+    index, touching only the dynamic link tables and the re-selection
+    counter.  A drained lane exits the loop before its remaining
+    boundaries fire, but a monolithic scan of the same budget still
+    fires them — so the driver *replays* the boundaries in
+    ``[stop, cycles)`` here, keeping chunked == monolithic bitwise for
+    living points too (the rest of the drained state is untouched by
+    construction: the update writes no packet, stat or phase field).
     """
     i32 = jnp.int32
     cycles = ss.cycles.astype(i32)
@@ -132,4 +146,14 @@ def run_chunked(step, ss, st, mem_on: bool, chunk: int = CHUNK_CYCLES):
         return (t0 < cycles) & ~drain_done(ss, s, t0, mem_on)
 
     st, t0 = jax.lax.while_loop(cond, body, (st, i32(0)))
+    if window_fn is not None:
+        # first window boundary the in-step cond did NOT fire: cycles in
+        # [0, t0) all executed, so that is the first multiple of the
+        # window cadence >= t0
+        W = i32(CHUNK_CYCLES)
+        tb = ((t0 + W - 1) // W) * W
+        st, _ = jax.lax.while_loop(
+            lambda c: c[1] < cycles,
+            lambda c: (window_fn(c[0], c[1]), c[1] + W),
+            (st, tb))
     return _finalize(ss, st, t0)

@@ -78,8 +78,18 @@ class Metrics:
     wl_pkts: int = 0                 # packets that crossed the air
     wl_nacks: int = 0                # failed attempts (NACK events)
     wl_dropped: int = 0              # packets dropped at max_retx
+    wl_dropped_payload: int = 0      # payload flits those drops silently
+    #                                  lost (x members for multicast) —
+    #                                  nonzero means delivered-data counts
+    #                                  under-report the offered work
+    mem_dropped_reads: int = 0       # read round trips lost to ARQ drops
     wl_rate_hist: dict = dataclasses.field(default_factory=dict)
-    #                                 rate name -> delivered flits
+    #                                 rate name -> delivered flits (living
+    #                                 points: from the in-scan [R] attempt
+    #                                 counters, so mid-run re-selections
+    #                                 attribute each flit to the rate that
+    #                                 actually carried it)
+    wl_resel: int = 0                # in-scan rate re-selections (ISSUE 6)
     retx_energy_share: float = 0.0   # failed-attempt share of link energy
     # chunked-execution driver metadata (ISSUE 5): the lane's semantic
     # cycle budget (what ``throughput`` etc. normalize by) and where the
@@ -90,7 +100,14 @@ class Metrics:
 
     @property
     def trace_done(self) -> bool:
-        return self.n_phases > 0 and self.phases_done >= self.n_phases
+        """All phases closed AND every payload actually arrived.
+
+        ARQ-exhaustion drops credit the phase barrier so a lossy trace
+        drains instead of wedging — but the dropped data never reached
+        its receivers, so the run must not report as complete (ISSUE 6).
+        """
+        return (self.n_phases > 0 and self.phases_done >= self.n_phases
+                and self.wl_dropped_payload == 0)
 
     @property
     def trace_cycles(self) -> int:
@@ -189,16 +206,32 @@ def compute_metrics_batch(pss: Sequence[PackedSim], st: SimState,
             # pair's rate-dependent energy per bit
             pf = np.asarray(st.wl_pair_flits[g], np.float64)
             ff = np.asarray(st.wl_fail_flits[g], np.float64)
-            e_pair = float((pf * pl.epb).sum()) * bits
-            e_fail = float((ff * pl.epb).sum()) * bits
+            living = bool(getattr(ps, "drift_on", False)
+                          or getattr(ps, "reselect", False))
+            if living:
+                # the pair's rate entry moves mid-run, so the per-pair
+                # counters no longer identify a rate: energy, air
+                # occupancy and the rate histogram come from the exact
+                # in-scan [R] attempt split instead (time-resolved)
+                att_r = np.asarray(st.wl_rate_flits[g], np.float64)
+                fail_r = np.asarray(st.wl_rate_fail[g], np.float64)
+                e_pair = float((att_r * pl.epb_r).sum()) * bits
+                e_fail = float((fail_r * pl.epb_r).sum()) * bits
+                air = float((att_r * pl.serv_r).sum())
+                hist = {entry.name: int(att_r[r] - fail_r[r])
+                        for r, entry in enumerate(pl.table)
+                        if att_r[r] > fail_r[r]}
+            else:
+                e_pair = float((pf * pl.epb).sum()) * bits
+                e_fail = float((ff * pl.epb).sum()) * bits
+                air = float((pf * pl.serv).sum())
+                hist = {}
+                for r, entry in enumerate(pl.table):
+                    dfl = int(((pf - ff) * (pl.rate_idx == r)).sum())
+                    if dfl:
+                        hist[entry.name] = dfl
             energy += e_pair
             wl_pkts = int(st.wl_pkts[g])
-            hist = {}
-            for r, entry in enumerate(pl.table):
-                dfl = int(((pf - ff) * (pl.rate_idx == r)).sum())
-                if dfl:
-                    hist[entry.name] = dfl
-            air = float((pf * pl.serv).sum())
             phykw = dict(
                 wl_goodput_gbps=float(st.wl_rx_flits[g]) * bits
                 * phy.clock_ghz / window,
@@ -208,7 +241,10 @@ def compute_metrics_batch(pss: Sequence[PackedSim], st: SimState,
                 wl_pkts=wl_pkts,
                 wl_nacks=int(st.wl_nacks[g]),
                 wl_dropped=int(st.pkts_dropped[g]),
+                wl_dropped_payload=int(st.wl_drop_flits[g]),
+                mem_dropped_reads=int(st.mem_drop_reads[g]),
                 wl_rate_hist=hist,
+                wl_resel=int(st.wl_resel[g]),
                 retx_energy_share=e_fail / max(e_pair, 1e-12),
             )
         memkw = {}

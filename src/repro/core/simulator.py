@@ -187,6 +187,7 @@ from repro.core.routing import RoutingTables
 from repro.core.topology import Topology
 from repro.core.traffic import NO_PKT, TrafficTable
 from repro.memory.model import MEM_CH, DEFAULT_DRAM
+from repro.phy.living import make_window_fn
 from repro.phy.retx import crc_fail as _crc_fail
 
 V = 8            # virtual channels per port (paper §IV)
@@ -279,12 +280,28 @@ class SimStatic(NamedTuple):
     # static ``phy_on`` flag compiles the ARQ path; ``rx_hold`` is also
     # raised (alone) for multicast tables — store-and-forward receivers
     # (the one-shot all-reduce livelock fix, see module docstring).
+    # Multicast tables run broadcast ARQ over the same per-pair tables
+    # (ISSUE 6): group service/PER threshold = max over the member links.
     wl_serv: jnp.ndarray     # [WMAX, WMAX] flit cycles per (src, dst) WI
     wl_perq: jnp.ndarray     # [WMAX, WMAX] 16-bit PER threshold per link
     rx_hold: jnp.ndarray     # bool: rx slots hold whole packets
     max_retx: jnp.ndarray    # scalar i32: ARQ attempt bound per packet
     phy_seed: jnp.ndarray    # scalar u32: CRC hash seed
     ctrl_flits: jnp.ndarray  # scalar i32: control-packet length in flits
+    # living-channel tables (ISSUE 6; see repro.phy.living).  Placeholder
+    # shapes unless the point is living (SNR drift and/or in-scan rate
+    # re-selection) — the static ``living`` flag compiles the window
+    # updates, and the dynamic carry tables replace wl_serv/wl_perq.
+    wl_rate0: jnp.ndarray    # [WMAX, WMAX] i32 host-selected rate entry
+    wl_snr: jnp.ndarray      # [WMAX, WMAX] f32 undrifted SNR map (dB)
+    wl_serv_r: jnp.ndarray   # [R] i32 flit cycles per rate entry
+    wl_perq_r: jnp.ndarray   # [R, WMAX, WMAX] i32 PER threshold per entry
+    wl_gp_q: jnp.ndarray     # [R, WMAX, WMAX] i32 quantized goodput
+    wl_gain_r: jnp.ndarray   # [R] f32 processing gain per entry
+    wl_gbps_r: jnp.ndarray   # [R] f32 line rate per entry
+    wl_pkt_bits: jnp.ndarray  # f32 packet bits (PER recompute under drift)
+    wl_drift_amp: jnp.ndarray   # f32 aging amplitude in dB (0 = static)
+    wl_drift_period: jnp.ndarray  # i32 windows between drift knots
 
 
 class SimState(NamedTuple):
@@ -354,6 +371,18 @@ class SimState(NamedTuple):
     wl_pkts: jnp.ndarray      # packets that crossed the air (CRC pass)
     wl_nacks: jnp.ndarray     # failed attempts (NACK events)
     pkts_dropped: jnp.ndarray  # packets dropped at max_retx
+    wl_drop_flits: jnp.ndarray  # payload flits lost to ARQ drops (x group
+    #                             members for multicast — undelivered
+    #                             receptions, mirroring wl_rx_flits)
+    mem_drop_reads: jnp.ndarray  # read round trips lost to ARQ drops
+    # living-channel dynamics (placeholder shapes unless ``living``):
+    # the current per-pair link tables, refreshed per scan window
+    wl_serv_d: jnp.ndarray    # [WMAX, WMAX] i32 current flit cycles
+    wl_perq_d: jnp.ndarray    # [WMAX, WMAX] i32 current PER threshold
+    wl_rate_d: jnp.ndarray    # [WMAX, WMAX] i32 current rate entry
+    wl_resel: jnp.ndarray     # scalar: in-scan rate re-selections
+    wl_rate_flits: jnp.ndarray  # [R] flit attempts per rate entry
+    wl_rate_fail: jnp.ndarray   # [R] failing-attempt flits per rate entry
     # driver metadata (filled by the chunked/monolithic drivers, not the
     # step): the lane's semantic cycle budget and where the outer loop
     # actually stopped (chunk granularity; == budget without early drain)
@@ -363,13 +392,17 @@ class SimState(NamedTuple):
 
 def init_state(B: int, N: int, P: int = 1, K: int = 1, Y: int = 1,
                BK: int = 1, mem_on: bool = False,
-               phy_on: bool = False) -> SimState:
+               phy_on: bool = False, living: bool = False,
+               R: int = 1) -> SimState:
     """Zero state.  Carry slimming (ISSUE 5): small-enum per-slot fields
     are i8/i16 (both engines agree, so the differential tests compare
-    bitwise), and the closed-loop memory / lossy-PHY state blocks shrink
-    to placeholder scalars when their path is not compiled — the step
-    only reads them under the matching static flag, and ``mem_on`` /
-    ``phy_on`` are already part of the batch shape key."""
+    bitwise), and the closed-loop memory / lossy-PHY / living-channel
+    state blocks shrink to placeholder scalars when their path is not
+    compiled — the step only reads them under the matching static flag,
+    and ``mem_on`` / ``phy_on`` / ``living`` are already part of the
+    batch shape key.  The living dynamic tables start zeroed: the window
+    update fires at ``t == 0`` before any read (window 0 seeds the rate
+    from the host selection, ``SimStatic.wl_rate0``)."""
     i32, i16, i8 = jnp.int32, jnp.int16, jnp.int8
 
     def zBV():
@@ -380,6 +413,8 @@ def init_state(B: int, N: int, P: int = 1, K: int = 1, Y: int = 1,
     NK = (N, K) if mem_on else (1, 1)
     YCB = (Y, MEM_CH, BK) if mem_on else (1, 1, 1)
     WW = (WMAX, WMAX) if phy_on else (1, 1)
+    WWL = (WMAX, WMAX) if living else (1, 1)
+    RL = (R,) if living else (1,)
     return SimState(
         pkt_src=jnp.full((B, V), -1, i32), pkt_idx=zBV(), pkt_dst=zBV(),
         born=zBV(), out_o=zBV(), out_buf=zBV(), out_wo=zBV(),
@@ -416,6 +451,10 @@ def init_state(B: int, N: int, P: int = 1, K: int = 1, Y: int = 1,
         wl_fail_flits=jnp.zeros(WW, i32),
         wl_pkts=jnp.int32(0), wl_nacks=jnp.int32(0),
         pkts_dropped=jnp.int32(0),
+        wl_drop_flits=jnp.int32(0), mem_drop_reads=jnp.int32(0),
+        wl_serv_d=jnp.zeros(WWL, i32), wl_perq_d=jnp.zeros(WWL, i32),
+        wl_rate_d=jnp.zeros(WWL, i32), wl_resel=jnp.int32(0),
+        wl_rate_flits=jnp.zeros(RL, i32), wl_rate_fail=jnp.zeros(RL, i32),
         cycles_run=jnp.int32(0), drain_cycle=jnp.int32(0),
     )
 
@@ -426,7 +465,8 @@ def _route_fields(ss: SimStatic, at_switch: jnp.ndarray, dst: jnp.ndarray):
     return oo, ss.o_buf[oo], ss.o_wo[oo], ss.o_is_wl[oo], ss.o_is_ej[oo]
 
 
-def make_step(B: int, mem_on: bool = False, phy_on: bool = False):
+def make_step(B: int, mem_on: bool = False, phy_on: bool = False,
+              drift_on: bool = False, reselect: bool = False):
     """Build the per-cycle transition function (shapes baked in).
 
     Scatter-free: arbitration winners are found by masked min over static
@@ -435,9 +475,15 @@ def make_step(B: int, mem_on: bool = False, phy_on: bool = False):
     compiles the closed-loop memory path — bank model, reply gating,
     outstanding-transaction cap, per-slot packet lengths; ``phy_on``
     (static) compiles the lossy-channel ARQ path — per-link rates and
-    pacing, CRC retransmission, drops.  With both off the program is
+    pacing, CRC retransmission, drops.  ``drift_on``/``reselect``
+    (static, imply ``phy_on``) compile the living-channel path: the
+    per-pair tables are read from the carry and refreshed at scan-window
+    boundaries by ``phy.living.make_window_fn`` (SNR aging walk and/or
+    in-scan rate re-selection).  With everything off the program is
     exactly the open-loop ideal-channel step.
     """
+    living = drift_on or reselect
+    assert not living or phy_on, "living channel requires the ARQ path"
     NC = B * V
     NCp1 = NC + 1
     assert NC * (NC + 1) < 2**31, \
@@ -453,6 +499,16 @@ def make_step(B: int, mem_on: bool = False, phy_on: bool = False):
         i32 = jnp.int32
         t = t.astype(i32)
         post = (t >= ss.warmup).astype(i32)
+        if living:
+            # living channel: refresh the dynamic per-pair link tables at
+            # every scan-window boundary (cadence = CHUNK_CYCLES, a fixed
+            # semantic constant — not the driver's execution chunk).  The
+            # drain-aware driver replays the remaining boundaries after
+            # an early exit (chunked.run_chunked), so chunked and
+            # monolithic execution stay bitwise-equal.
+            wfn = make_window_fn(ss, drift_on, reselect)
+            st = jax.lax.cond(t % i32(CHUNK_CYCLES) == 0,
+                              lambda s: wfn(s, t), lambda s: s, st)
         rot = t % NC
         S = ss.next_out.shape[0]
         M = ss.mc_member.shape[0]
@@ -664,16 +720,34 @@ def make_step(B: int, mem_on: bool = False, phy_on: bool = False):
             # link's selected rate, and the current attempt's CRC
             # outcome is a deterministic hash — known sender-side, so
             # failing attempts occupy the channel but deliver nothing.
-            ws_bv = jnp.clip(ss.b_wi, 0, WMAX - 1)[:, None]      # [B, 1]
+            # Living points read the per-window dynamic tables instead of
+            # the packed static ones (refreshed by the update above).
+            serv_tab = st.wl_serv_d if living else ss.wl_serv
+            perq_tab = st.wl_perq_d if living else ss.wl_perq
+            ws_b = jnp.clip(ss.b_wi, 0, WMAX - 1)                # [B]
+            ws_bv = ws_b[:, None]                                # [B, 1]
             wd_bv = jnp.clip(out_wo, 0, WMAX - 1)                # [B, V]
-            serv_wl_bv = ss.wl_serv[ws_bv, wd_bv]                # [B, V]
+            serv_wl_bv = serv_tab[ws_bv, wd_bv]                  # [B, V]
+            perq_bv = perq_tab[ws_bv, wd_bv]
+            # broadcast ARQ (ISSUE 6): a multicast attempt is paced and
+            # CRC-checked against its WORST member link — group service
+            # time and PER threshold are the max over member links.  The
+            # hash draw below is link-independent, so per-member
+            # outcomes are comonotone: "any member fails" is exactly
+            # "the worst member fails", i.e. worst-link group
+            # retransmission with all-or-nothing delivery to the set.
+            serv_mc = jnp.where(member, serv_tab[ws_b][:, None, :],
+                                0).max(axis=-1)                  # [B, V]
+            perq_mc = jnp.where(member, perq_tab[ws_b][:, None, :],
+                                0).max(axis=-1)
+            serv_wl_bv = jnp.where(is_mc, serv_mc, serv_wl_bv)
+            perq_bv = jnp.where(is_mc, perq_mc, perq_bv)
             pb_ok = st.pair_busy[ws_bv, wd_bv] <= t
             wl_ok &= ~out_is_wl | (whole & pb_ok)
             # packet uid is padding-independent (pkt_idx < 2^16 always),
             # so batched and single-point runs draw identical outcomes
             uid = psrc_c * 65536 + pidx_c
-            fail_bv = _crc_fail(ss.phy_seed, uid, attempt,
-                                ss.wl_perq[ws_bv, wd_bv])        # [B, V]
+            fail_bv = _crc_fail(ss.phy_seed, uid, attempt, perq_bv)
         elig = active & (occ > 0) & wl_ok & hold_ok \
             & (out_is_ej | ((out_vc >= 0) & (space > 0) & link_free))
         code2 = jnp.where(elig, score * NCp1 + flat2d, BIGC)
@@ -758,10 +832,18 @@ def make_step(B: int, mem_on: bool = False, phy_on: bool = False):
             wl_pkts = st.wl_pkts \
                 + post * (tail & out_is_wl).sum().astype(i32)
             pkts_dropped = st.pkts_dropped + post * drop.sum().astype(i32)
+            # a drop's ejection(s) will never happen: count the lost
+            # payload (once per member copy for multicast, mirroring
+            # wl_rx_flits) so metrics can flag the trace incomplete
+            member_cnt = jnp.where(is_mc, member.sum(axis=-1), 1) \
+                .astype(i32)
+            wl_drop_flits = st.wl_drop_flits + post * jnp.where(
+                drop, plen_bv * member_cnt, 0).sum().astype(i32)
         else:
             tail = fwd & (sent >= plen_bv)
             wl_nacks, wl_pkts = st.wl_nacks, st.wl_pkts
             pkts_dropped = st.pkts_dropped
+            wl_drop_flits = st.wl_drop_flits
         ej = fwd & out_is_ej
 
         # ejection stats
@@ -778,6 +860,15 @@ def make_step(B: int, mem_on: bool = False, phy_on: bool = False):
         phv = ss.phases[psrc_c, pidx_c]                          # [B, V]
         phase_del = st.phase_del \
             + (tail_ej & (phv == st.cur_phase)).sum().astype(i32)
+        if phy_on:
+            # ARQ-exhaustion drop: the ejection(s) this packet owed the
+            # open phase will never happen — credit them now (one per
+            # member copy for multicast, matching the trace table's
+            # per-member phase_need) so a lossy trace closes its
+            # barriers and drains instead of wedging forever (ISSUE 6)
+            phase_del = phase_del + jnp.where(
+                drop & (phv == st.cur_phase), member_cnt, 0) \
+                .sum().astype(i32)
         parr = jnp.arange(P, dtype=i32)
         phase_flits = st.phase_flits + jnp.where(
             parr == st.cur_phase, ej.sum().astype(i32), 0)
@@ -935,12 +1026,19 @@ def make_step(B: int, mem_on: bool = False, phy_on: bool = False):
         wl_tx_flits = st.wl_tx_flits + post * is_wl_fwd.sum().astype(i32)
         wl_rx_flits = st.wl_rx_flits \
             + post * (incoming & ss.b_is_rx[:, None]).sum().astype(i32)
+        mem_drop_reads = st.mem_drop_reads
+        wl_rate_flits = st.wl_rate_flits
+        wl_rate_fail = st.wl_rate_fail
         if phy_on:
             # per-(src WI, dst WI) pacing + energy counters, scatter-free:
             # the (sub-channel, receiver) air winner is unique, so each
             # pair sees at most one transmission per cycle — a masked
             # one-assignment over the [W, W] grid (cf. the memory path's
-            # per-(stack, channel) ejection winners).
+            # per-(stack, channel) ejection winners).  A multicast winner
+            # appears in EVERY member receiver's column; the air/pair
+            # accounting anchors it on the routed (sender, anchor) pair
+            # once — the own-column check is a no-op for unicast, whose
+            # winning column IS its destination.
             ws_ids = jnp.arange(WMAX, dtype=i32)[:, None]        # [W, 1]
             r_ids = jnp.clip(ws_ids % rxw, 0, RXWMAX - 1)
             w2 = win2_wl[r_ids, warr[None, :]]                   # [W, W]
@@ -948,12 +1046,25 @@ def make_step(B: int, mem_on: bool = False, phy_on: bool = False):
             slot2 = jnp.where(v2, w2 % NCp1, 0)
             txp = v2 & fwd.reshape(-1)[slot2] \
                 & out_is_wl.reshape(-1)[slot2] \
-                & (ss.b_wi[slot2 // V] == ws_ids)
+                & (ss.b_wi[slot2 // V] == ws_ids) \
+                & (wd_bv.reshape(-1)[slot2] == warr[None, :])
             failp = txp & fail_bv.reshape(-1)[slot2]
             pair_busy = jnp.where(txp, t + serv_t.reshape(-1)[slot2],
                                   st.pair_busy)
             wl_pair_flits = st.wl_pair_flits + post * txp.astype(i32)
             wl_fail_flits = st.wl_fail_flits + post * failp.astype(i32)
+            if living:
+                # per-rate-entry attempt counters: when the pair's entry
+                # moves mid-run the per-pair counters no longer identify
+                # a single rate, so metrics needs the exact [R] split
+                # (attributed to the anchor pair's current entry)
+                rhot = jnp.arange(wl_rate_flits.shape[0],
+                                  dtype=i32)[:, None, None] \
+                    == st.wl_rate_d[None]
+                wl_rate_flits = wl_rate_flits + post * jnp.where(
+                    rhot & txp[None], 1, 0).sum(axis=(1, 2))
+                wl_rate_fail = wl_rate_fail + post * jnp.where(
+                    rhot & failp[None], 1, 0).sum(axis=(1, 2))
             if mem_on:
                 # ARQ drop of a memory request/reply: the sender observes
                 # the drop (instant NACK), so the requester's outstanding
@@ -982,6 +1093,10 @@ def make_step(B: int, mem_on: bool = False, phy_on: bool = False):
                 dflat = jnp.where(is_rqd, rrd * Kk + rsd, -1).reshape(-1)
                 dead = dead | (jnp.arange(Nn * Kk, dtype=i32)[:, None]
                                == dflat[None]).any(1).reshape(Nn, Kk)
+                # lost read round trips: a dropped read request or read
+                # reply means the requester never sees its data
+                mem_drop_reads = mem_drop_reads + post * (
+                    d_on & ((opd == 1) | (opd == 3))).sum().astype(i32)
         else:
             pair_busy = st.pair_busy
             wl_pair_flits = st.wl_pair_flits
@@ -1119,6 +1234,10 @@ def make_step(B: int, mem_on: bool = False, phy_on: bool = False):
             awake_cycles=awake_cycles, sleep_cycles=sleep_cycles,
             wl_pair_flits=wl_pair_flits, wl_fail_flits=wl_fail_flits,
             wl_pkts=wl_pkts, wl_nacks=wl_nacks, pkts_dropped=pkts_dropped,
+            wl_drop_flits=wl_drop_flits, mem_drop_reads=mem_drop_reads,
+            wl_serv_d=st.wl_serv_d, wl_perq_d=st.wl_perq_d,
+            wl_rate_d=st.wl_rate_d, wl_resel=st.wl_resel,
+            wl_rate_flits=wl_rate_flits, wl_rate_fail=wl_rate_fail,
             cycles_run=st.cycles_run, drain_cycle=st.drain_cycle,
         )
 
@@ -1126,13 +1245,17 @@ def make_step(B: int, mem_on: bool = False, phy_on: bool = False):
 
 
 def _scan_point(ss: SimStatic, st: SimState, cycles: int, B: int,
-                mem_on: bool, phy_on: bool = False) -> SimState:
+                mem_on: bool, phy_on: bool = False,
+                drift_on: bool = False,
+                reselect: bool = False) -> SimState:
     """Monolithic driver: one fixed-length scan (the pre-ISSUE-5 model).
 
     Kept as a differential oracle: ``tests/test_chunked_exec.py`` and
-    ``benchmarks/simspeed.py`` pin the chunked driver against it.
+    ``benchmarks/simspeed.py`` pin the chunked driver against it.  The
+    living-channel window updates fire inside the step, so this driver
+    needs no boundary replay.
     """
-    step = make_step(B, mem_on, phy_on)
+    step = make_step(B, mem_on, phy_on, drift_on, reselect)
 
     def body(carry, t):
         return step(ss, carry, t), None
@@ -1143,25 +1266,32 @@ def _scan_point(ss: SimStatic, st: SimState, cycles: int, B: int,
 
 
 def _chunk_point(ss: SimStatic, st: SimState, B: int, mem_on: bool,
-                 phy_on: bool, chunk: int) -> SimState:
+                 phy_on: bool, chunk: int, drift_on: bool = False,
+                 reselect: bool = False) -> SimState:
     """Chunked driver: while_loop to the lane's traced ``ss.cycles``."""
-    return chunked.run_chunked(make_step(B, mem_on, phy_on), ss, st,
-                               mem_on, chunk)
+    wfn = make_window_fn(ss, drift_on, reselect) \
+        if (drift_on or reselect) else None
+    return chunked.run_chunked(
+        make_step(B, mem_on, phy_on, drift_on, reselect), ss, st,
+        mem_on, chunk, window_fn=wfn)
 
 
-@functools.partial(jax.jit, static_argnums=(2, 3, 4, 5),
+@functools.partial(jax.jit, static_argnums=(2, 3, 4, 5, 6, 7),
                    donate_argnums=(1,))
 def _run_one(ss: SimStatic, st: SimState, B: int,
              mem_on: bool = False, phy_on: bool = False,
-             chunk: int = CHUNK_CYCLES) -> SimState:
-    return _chunk_point(ss, st, B, mem_on, phy_on, chunk)
+             chunk: int = CHUNK_CYCLES, drift_on: bool = False,
+             reselect: bool = False) -> SimState:
+    return _chunk_point(ss, st, B, mem_on, phy_on, chunk, drift_on,
+                        reselect)
 
 
-@functools.partial(jax.jit, static_argnums=(2, 3, 4, 5),
+@functools.partial(jax.jit, static_argnums=(2, 3, 4, 5, 6, 7),
                    donate_argnums=(1,))
 def _run_mapped(ss: SimStatic, st: SimState, B: int,
                 mem_on: bool = False, phy_on: bool = False,
-                chunk: int = CHUNK_CYCLES) -> SimState:
+                chunk: int = CHUNK_CYCLES, drift_on: bool = False,
+                reselect: bool = False) -> SimState:
     """Sequentially map the per-point driver over a stacked batch.
 
     ``lax.map`` (not ``vmap``): each point's computation is the *identical*
@@ -1175,43 +1305,50 @@ def _run_mapped(ss: SimStatic, st: SimState, B: int,
     """
     return jax.lax.map(
         lambda args: _chunk_point(args[0], args[1], B, mem_on, phy_on,
-                                  chunk),
+                                  chunk, drift_on, reselect),
         (ss, st))
 
 
-@functools.partial(jax.pmap, static_broadcasted_argnums=(2, 3, 4, 5),
+@functools.partial(jax.pmap, static_broadcasted_argnums=(2, 3, 4, 5, 6, 7),
                    donate_argnums=(1,))
 def _run_pmapped(ss: SimStatic, st: SimState, B: int,
                  mem_on: bool = False, phy_on: bool = False,
-                 chunk: int = CHUNK_CYCLES) -> SimState:
+                 chunk: int = CHUNK_CYCLES, drift_on: bool = False,
+                 reselect: bool = False) -> SimState:
     return jax.lax.map(
         lambda args: _chunk_point(args[0], args[1], B, mem_on, phy_on,
-                                  chunk),
+                                  chunk, drift_on, reselect),
         (ss, st))
 
 
-@functools.partial(jax.jit, static_argnums=(2, 3, 4, 5))
+@functools.partial(jax.jit, static_argnums=(2, 3, 4, 5, 6, 7))
 def _run_one_mono(ss: SimStatic, st: SimState, cycles: int, B: int,
-                  mem_on: bool = False, phy_on: bool = False) -> SimState:
-    return _scan_point(ss, st, cycles, B, mem_on, phy_on)
+                  mem_on: bool = False, phy_on: bool = False,
+                  drift_on: bool = False,
+                  reselect: bool = False) -> SimState:
+    return _scan_point(ss, st, cycles, B, mem_on, phy_on, drift_on,
+                       reselect)
 
 
-@functools.partial(jax.jit, static_argnums=(2, 3, 4, 5))
+@functools.partial(jax.jit, static_argnums=(2, 3, 4, 5, 6, 7))
 def _run_mapped_mono(ss: SimStatic, st: SimState, cycles: int, B: int,
-                     mem_on: bool = False, phy_on: bool = False) -> SimState:
+                     mem_on: bool = False, phy_on: bool = False,
+                     drift_on: bool = False,
+                     reselect: bool = False) -> SimState:
     return jax.lax.map(
         lambda args: _scan_point(args[0], args[1], cycles, B, mem_on,
-                                 phy_on),
+                                 phy_on, drift_on, reselect),
         (ss, st))
 
 
-@functools.partial(jax.pmap, static_broadcasted_argnums=(2, 3, 4, 5))
+@functools.partial(jax.pmap, static_broadcasted_argnums=(2, 3, 4, 5, 6, 7))
 def _run_pmapped_mono(ss: SimStatic, st: SimState, cycles: int, B: int,
-                      mem_on: bool = False,
-                      phy_on: bool = False) -> SimState:
+                      mem_on: bool = False, phy_on: bool = False,
+                      drift_on: bool = False,
+                      reselect: bool = False) -> SimState:
     return jax.lax.map(
         lambda args: _scan_point(args[0], args[1], cycles, B, mem_on,
-                                 phy_on),
+                                 phy_on, drift_on, reselect),
         (ss, st))
 
 
@@ -1233,16 +1370,22 @@ class PackedSim:
     dims: dict = dataclasses.field(default_factory=dict)
     mem_on: bool = False      # closed-loop memory path compiled in
     phy_on: bool = False      # lossy-channel ARQ path compiled in
+    drift_on: bool = False    # living channel: SNR aging walk compiled in
+    reselect: bool = False    # living channel: in-scan rate re-selection
     phy_link: object = None   # phy.PhyLinkInfo (host-side, for metrics)
 
     def shape_key(self) -> tuple:
         """Hashable signature of every padded array shape (batch grouping).
 
-        ``mem_on``/``phy_on`` are part of the key: each selects a
-        different compiled step, so open-loop, closed-loop and
-        lossy-channel points never share a batch.
+        ``mem_on``/``phy_on``/``drift_on``/``reselect`` are part of the
+        key: each selects a different compiled step, so open-loop,
+        closed-loop, lossy-channel and living-channel points never share
+        a batch (the placeholder shapes alone cannot distinguish the two
+        living flags).
         """
-        return (("mem_on", self.mem_on), ("phy_on", self.phy_on)) + tuple(
+        return (("mem_on", self.mem_on), ("phy_on", self.phy_on),
+                ("drift_on", self.drift_on),
+                ("reselect", self.reselect)) + tuple(
             (k, np.shape(v)) for k, v in self.ss._asdict().items())
 
 
@@ -1391,6 +1534,12 @@ def pack(topo: Topology, rt: RoutingTables, tt: TrafficTable,
     # rx epb zeroing) identically for both engines.
     pli, phy_on, rx_hold = pack_link_state(
         topo, phy, tt, phy_spec, b_dst, b_depth, b_epb, rx0)
+    # living channel (ISSUE 6): SNR drift and/or in-scan rate
+    # re-selection compile the window-update path and embed the
+    # per-entry tables; static points keep (1, 1) placeholders
+    drift_on = bool(phy_on and phy_spec.drift_amp_db > 0.0)
+    reselect = bool(phy_on and phy_spec.reselect)
+    living = drift_on or reselect
 
     # arbitration candidate tables: buffers feeding each switch ...
     in_bufs: list[list[int]] = [[] for _ in range(S)]
@@ -1548,12 +1697,31 @@ def pack(topo: Topology, rt: RoutingTables, tt: TrafficTable,
         max_retx=jnp.int32(phy_spec.max_retx if phy_on else 1),
         phy_seed=jnp.uint32(phy_spec.seed if phy_on else 0),
         ctrl_flits=jnp.int32(phy.ctrl_packet_flits),
+        wl_rate0=jnp.asarray(pli.rate_idx if living
+                             else np.zeros((1, 1), np.int32)),
+        wl_snr=jnp.asarray(pli.snr_pad if living
+                           else np.zeros((1, 1), np.float32)),
+        wl_serv_r=jnp.asarray(pli.serv_r if living
+                              else np.ones(1, np.int32)),
+        wl_perq_r=jnp.asarray(pli.perq_r if living
+                              else np.zeros((1, 1, 1), np.int32)),
+        wl_gp_q=jnp.asarray(pli.gp_q if living
+                            else np.zeros((1, 1, 1), np.int32)),
+        wl_gain_r=jnp.asarray(pli.gain_r if living
+                              else np.ones(1, np.float32)),
+        wl_gbps_r=jnp.asarray(pli.gbps_r if living
+                              else np.ones(1, np.float32)),
+        wl_pkt_bits=jnp.float32(phy.pkt_flits * phy.flit_bits),
+        wl_drift_amp=jnp.float32(phy_spec.drift_amp_db if phy_on else 0.0),
+        wl_drift_period=jnp.int32(max(1, phy_spec.drift_period)
+                                  if phy_on else 1),
     )
     dims = {"B": B, "S": S, "R": R, "K": K, "CS": CS, "CR": CR,
             "M": M, "P": P, "Y": Y, "BK": BK}
     return PackedSim(ss=ss, B=B, n_cores=topo.n_cores, Lw=Lw,
                      n_inj=n_inj, topo=topo, rt=rt, phy=phy, sim=sim,
-                     dims=dims, mem_on=mem_on, phy_on=phy_on, phy_link=pli)
+                     dims=dims, mem_on=mem_on, phy_on=phy_on,
+                     drift_on=drift_on, reselect=reselect, phy_link=pli)
 
 
 # --------------------------------------------------------------------------
@@ -1566,8 +1734,9 @@ def _tree_stack(trees):
 
 def init_state_batch(G: int, B: int, N: int, P: int = 1, K: int = 1,
                      Y: int = 1, BK: int = 1, mem_on: bool = False,
-                     phy_on: bool = False) -> SimState:
-    st = init_state(B, N, P, K, Y, BK, mem_on, phy_on)
+                     phy_on: bool = False, living: bool = False,
+                     R: int = 1) -> SimState:
+    st = init_state(B, N, P, K, Y, BK, mem_on, phy_on, living, R)
     return jax.tree_util.tree_map(
         lambda x: jnp.broadcast_to(x, (G,) + x.shape), st)
 
@@ -1628,17 +1797,23 @@ def run_batch(pss: Sequence[PackedSim], cycles: int | None = None,
     sdims = _state_dims(pss[0])
     mem_on = pss[0].mem_on
     phy_on = pss[0].phy_on
+    drift_on = pss[0].drift_on
+    reselect = pss[0].reselect
+    living = drift_on or reselect
+    Rr = int(pss[0].ss.wl_serv_r.shape[0])
     G = len(pss)
     if G == 1:
-        st = init_state(*sdims, mem_on=mem_on, phy_on=phy_on)
+        st = init_state(*sdims, mem_on=mem_on, phy_on=phy_on,
+                        living=living, R=Rr)
         out = _run_one_mono(pss[0].ss, st, mono_cycles, B, mem_on,
-                            phy_on) if mono else \
+                            phy_on, drift_on, reselect) if mono else \
             _run_one(_budgeted(pss[0], cycles), st, B, mem_on, phy_on,
-                     chunk)
+                     chunk, drift_on, reselect)
         out = jax.tree_util.tree_map(lambda x: x[None], out)
         return jax.block_until_ready(out)
     ss = _tree_stack([_budgeted(ps, cycles) for ps in pss])
-    st = init_state_batch(G, *sdims, mem_on=mem_on, phy_on=phy_on)
+    st = init_state_batch(G, *sdims, mem_on=mem_on, phy_on=phy_on,
+                          living=living, R=Rr)
     D = devices if devices is not None else jax.local_device_count()
     D = min(D, G)
     if D > 1:
@@ -1648,19 +1823,23 @@ def run_batch(pss: Sequence[PackedSim], cycles: int | None = None,
                 lambda x: jnp.repeat(x[-1:], Gp - G, axis=0), ss)
             ss = jax.tree_util.tree_map(
                 lambda a, b: jnp.concatenate([a, b]), ss, pad)
-            st = init_state_batch(Gp, *sdims, mem_on=mem_on, phy_on=phy_on)
+            st = init_state_batch(Gp, *sdims, mem_on=mem_on, phy_on=phy_on,
+                                  living=living, R=Rr)
         shard = jax.tree_util.tree_map(
             lambda x: x.reshape((D, Gp // D) + x.shape[1:]), ss)
         st_sh = jax.tree_util.tree_map(
             lambda x: x.reshape((D, Gp // D) + x.shape[1:]), st)
         out = _run_pmapped_mono(shard, st_sh, mono_cycles, B, mem_on,
-                                phy_on) if mono else \
-            _run_pmapped(shard, st_sh, B, mem_on, phy_on, chunk)
+                                phy_on, drift_on, reselect) if mono else \
+            _run_pmapped(shard, st_sh, B, mem_on, phy_on, chunk,
+                         drift_on, reselect)
         out = jax.tree_util.tree_map(
             lambda x: x.reshape((Gp,) + x.shape[2:])[:G], out)
     else:
-        out = _run_mapped_mono(ss, st, mono_cycles, B, mem_on, phy_on) \
-            if mono else _run_mapped(ss, st, B, mem_on, phy_on, chunk)
+        out = _run_mapped_mono(ss, st, mono_cycles, B, mem_on, phy_on,
+                               drift_on, reselect) \
+            if mono else _run_mapped(ss, st, B, mem_on, phy_on, chunk,
+                                     drift_on, reselect)
     return jax.block_until_ready(out)
 
 
@@ -1672,11 +1851,13 @@ def run(ps: PackedSim, cycles: int | None = None, driver: str = "chunked",
     the drain-aware chunked while_loop (results are bitwise-equal; only
     ``drain_cycle`` may differ — the oracle never exits early).
     """
-    st = init_state(*_state_dims(ps), mem_on=ps.mem_on, phy_on=ps.phy_on)
+    living = ps.drift_on or ps.reselect
+    st = init_state(*_state_dims(ps), mem_on=ps.mem_on, phy_on=ps.phy_on,
+                    living=living, R=int(ps.ss.wl_serv_r.shape[0]))
     if driver == "monolithic":
         return jax.block_until_ready(
             _run_one_mono(ps.ss, st, int(cycles or ps.sim.cycles), ps.B,
-                          ps.mem_on, ps.phy_on))
+                          ps.mem_on, ps.phy_on, ps.drift_on, ps.reselect))
     return jax.block_until_ready(
         _run_one(_budgeted(ps, cycles), st, ps.B, ps.mem_on, ps.phy_on,
-                 chunk))
+                 chunk, ps.drift_on, ps.reselect))

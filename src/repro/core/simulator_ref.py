@@ -33,6 +33,15 @@ engines: here with ``.at[].set/.add`` scatters over the ``[WMAX, WMAX]``
 pair grids, in ``simulator.py`` via the air-winner tables — two
 independent formulations, pinned bitwise-equal.
 
+Semantics extension (ISSUE 6): broadcast ARQ and the living channel.
+Multicast tables now run over the lossy PHY — a group attempt is paced
+and CRC-checked against its worst member link, retransmitted as a group
+on NACK, and its drops credit the phase barrier and free every member
+copy.  Drift/re-selection points refresh the per-pair link tables at
+scan-window boundaries via the shared ``phy.living`` window update and
+split the attempt counters per rate entry — here with masked scatters,
+in ``simulator.py`` via one-hot gathers, pinned bitwise-equal.
+
 Original module docstring follows.
 
 Cycle-accurate flit-level simulator for multichip NoCs (paper §IV).
@@ -101,6 +110,7 @@ from repro.core.routing import RoutingTables
 from repro.core.topology import Topology
 from repro.core.traffic import NO_PKT, TrafficTable
 from repro.memory.model import MEM_CH, DEFAULT_DRAM
+from repro.phy.living import make_window_fn
 from repro.phy.retx import crc_fail as _crc_fail
 
 V = 8            # virtual channels per port (paper §IV)
@@ -173,13 +183,26 @@ class SimStatic(NamedTuple):
     t_row_hit: jnp.ndarray   # scalar i32
     t_row_miss: jnp.ndarray  # scalar i32
     max_outst: jnp.ndarray   # scalar i32
-    # lossy PHY tables (ISSUE 4; see simulator.py)
+    # lossy PHY tables (ISSUE 4; see simulator.py).  Multicast tables run
+    # broadcast ARQ over the same per-pair tables (ISSUE 6): group
+    # service/PER threshold = max over the member links.
     wl_serv: jnp.ndarray     # [WMAX, WMAX]
     wl_perq: jnp.ndarray     # [WMAX, WMAX]
     rx_hold: jnp.ndarray     # bool
     max_retx: jnp.ndarray    # scalar i32
     phy_seed: jnp.ndarray    # scalar u32
     ctrl_flits: jnp.ndarray  # scalar i32
+    # living-channel tables (ISSUE 6; see simulator.py / repro.phy.living)
+    wl_rate0: jnp.ndarray    # [WMAX, WMAX] i32 host-selected rate entry
+    wl_snr: jnp.ndarray      # [WMAX, WMAX] f32 undrifted SNR map (dB)
+    wl_serv_r: jnp.ndarray   # [R] i32 flit cycles per rate entry
+    wl_perq_r: jnp.ndarray   # [R, WMAX, WMAX] i32 PER threshold per entry
+    wl_gp_q: jnp.ndarray     # [R, WMAX, WMAX] i32 quantized goodput
+    wl_gain_r: jnp.ndarray   # [R] f32 processing gain per entry
+    wl_gbps_r: jnp.ndarray   # [R] f32 line rate per entry
+    wl_pkt_bits: jnp.ndarray  # f32 packet bits (PER recompute under drift)
+    wl_drift_amp: jnp.ndarray   # f32 aging amplitude in dB (0 = static)
+    wl_drift_period: jnp.ndarray  # i32 windows between drift knots
 
 
 class SimState(NamedTuple):
@@ -250,6 +273,18 @@ class SimState(NamedTuple):
     wl_pkts: jnp.ndarray
     wl_nacks: jnp.ndarray
     pkts_dropped: jnp.ndarray
+    wl_drop_flits: jnp.ndarray  # payload flits lost to ARQ drops (x group
+    #                             members for multicast — undelivered
+    #                             receptions, mirroring wl_rx_flits)
+    mem_drop_reads: jnp.ndarray  # read round trips lost to ARQ drops
+    # living-channel dynamics (placeholder shapes unless ``living``):
+    # the current per-pair link tables, refreshed per scan window
+    wl_serv_d: jnp.ndarray    # [WMAX, WMAX] i32 current flit cycles
+    wl_perq_d: jnp.ndarray    # [WMAX, WMAX] i32 current PER threshold
+    wl_rate_d: jnp.ndarray    # [WMAX, WMAX] i32 current rate entry
+    wl_resel: jnp.ndarray     # scalar: in-scan rate re-selections
+    wl_rate_flits: jnp.ndarray  # [R] flit attempts per rate entry
+    wl_rate_fail: jnp.ndarray   # [R] failing-attempt flits per rate entry
     # driver metadata (see simulator.py / core/chunked.py)
     cycles_run: jnp.ndarray   # scalar i32
     drain_cycle: jnp.ndarray  # scalar i32
@@ -257,7 +292,8 @@ class SimState(NamedTuple):
 
 def init_state(B: int, N: int, P: int = 1, K: int = 1, Y: int = 1,
                BK: int = 1, mem_on: bool = False,
-               phy_on: bool = False) -> SimState:
+               phy_on: bool = False, living: bool = False,
+               R: int = 1) -> SimState:
     """Zero state; same carry slimming as ``simulator.init_state`` (the
     differential tests compare the two engines' states field by field)."""
     i32, i16, i8 = jnp.int32, jnp.int16, jnp.int8
@@ -270,6 +306,8 @@ def init_state(B: int, N: int, P: int = 1, K: int = 1, Y: int = 1,
     NK = (N, K) if mem_on else (1, 1)
     YCB = (Y, MEM_CH, BK) if mem_on else (1, 1, 1)
     WW = (WMAX, WMAX) if phy_on else (1, 1)
+    WWL = (WMAX, WMAX) if living else (1, 1)
+    RL = (R,) if living else (1,)
     return SimState(
         pkt_src=jnp.full((B, V), -1, i32), pkt_idx=zBV(), pkt_dst=zBV(),
         born=zBV(), out_o=zBV(), out_buf=zBV(), out_wo=zBV(),
@@ -306,6 +344,10 @@ def init_state(B: int, N: int, P: int = 1, K: int = 1, Y: int = 1,
         wl_fail_flits=jnp.zeros(WW, i32),
         wl_pkts=jnp.int32(0), wl_nacks=jnp.int32(0),
         pkts_dropped=jnp.int32(0),
+        wl_drop_flits=jnp.int32(0), mem_drop_reads=jnp.int32(0),
+        wl_serv_d=jnp.zeros(WWL, i32), wl_perq_d=jnp.zeros(WWL, i32),
+        wl_rate_d=jnp.zeros(WWL, i32), wl_resel=jnp.int32(0),
+        wl_rate_flits=jnp.zeros(RL, i32), wl_rate_fail=jnp.zeros(RL, i32),
         cycles_run=jnp.int32(0), drain_cycle=jnp.int32(0),
     )
 
@@ -317,13 +359,21 @@ def _route_fields(ss: SimStatic, at_switch: jnp.ndarray, dst: jnp.ndarray):
 
 
 def make_step(B: int, Wout: int, RXW: int = 1, mem_on: bool = False,
-              phy_on: bool = False):
+              phy_on: bool = False, drift_on: bool = False,
+              reselect: bool = False):
     """Build the per-cycle transition function (shapes baked in).
 
     ``mem_on`` (static) compiles the closed-loop memory path in scatter
     style; ``phy_on`` the lossy-channel ARQ path; with both off the
     program is exactly the ideal open-loop step.
+    ``drift_on``/``reselect`` (static, imply ``phy_on``) compile the
+    living-channel path: the shared window update of
+    ``phy.living.make_window_fn`` refreshes the per-pair link tables at
+    scan-window boundaries (SNR aging walk and/or in-scan rate
+    re-selection).
     """
+    living = drift_on or reselect
+    assert not living or phy_on, "living channel requires the ARQ path"
     NC = B * V
     BIG = jnp.int32(4 * NC)
     flat2d = jnp.arange(NC, dtype=jnp.int32).reshape(B, V)
@@ -334,6 +384,16 @@ def make_step(B: int, Wout: int, RXW: int = 1, mem_on: bool = False,
         i32 = jnp.int32
         t = t.astype(i32)
         post = (t >= ss.warmup).astype(i32)
+        if living:
+            # living channel: refresh the dynamic per-pair link tables at
+            # every scan-window boundary (cadence = CHUNK_CYCLES, a fixed
+            # semantic constant — not the driver's execution chunk).  The
+            # drain-aware driver replays the remaining boundaries after
+            # an early exit (chunked.run_chunked), so chunked and
+            # monolithic execution stay bitwise-equal.
+            wfn = make_window_fn(ss, drift_on, reselect)
+            st = jax.lax.cond(t % i32(chunked.CHUNK_CYCLES) == 0,
+                              lambda s: wfn(s, t), lambda s: s, st)
         rot = t % NC
         S = ss.next_out.shape[0]
         M = ss.mc_member.shape[0]
@@ -537,15 +597,34 @@ def make_step(B: int, Wout: int, RXW: int = 1, mem_on: bool = False,
         if phy_on:
             # lossy PHY (see simulator.py): ARQ senders hold the whole
             # packet, pairs pace at the link rate, CRC outcome is the
-            # deterministic (seed, packet, attempt) hash
-            ws_bv = jnp.clip(ss.b_wi, 0, WMAX - 1)[:, None]      # [B, 1]
+            # deterministic (seed, packet, attempt) hash.  Living points
+            # read the per-window dynamic tables instead of the packed
+            # static ones (refreshed by the update above).
+            serv_tab = st.wl_serv_d if living else ss.wl_serv
+            perq_tab = st.wl_perq_d if living else ss.wl_perq
+            ws_b = jnp.clip(ss.b_wi, 0, WMAX - 1)                # [B]
+            ws_bv = ws_b[:, None]                                # [B, 1]
             wd_bv = jnp.clip(out_buf - ss.rx0, 0, WMAX - 1)      # [B, V]
-            serv_wl_bv = ss.wl_serv[ws_bv, wd_bv]                # [B, V]
+            serv_wl_bv = serv_tab[ws_bv, wd_bv]                  # [B, V]
+            perq_bv = perq_tab[ws_bv, wd_bv]
+            # broadcast ARQ (ISSUE 6): a multicast attempt is paced and
+            # CRC-checked against its WORST member link — group service
+            # time and PER threshold are the max over member links.  The
+            # hash draw below is link-independent, so per-member
+            # outcomes are comonotone: "any member fails" is exactly
+            # "the worst member fails", i.e. worst-link group
+            # retransmission with all-or-nothing delivery to the set.
+            serv_mcg = jnp.where(member2, serv_tab[ws_b][:, None, :],
+                                 0).max(axis=-1)                 # [B, V]
+            perq_mcg = jnp.where(member2, perq_tab[ws_b][:, None, :],
+                                 0).max(axis=-1)
+            serv_wl_bv = jnp.where(is_mc2, serv_mcg, serv_wl_bv)
+            perq_bv = jnp.where(is_mc2, perq_mcg, perq_bv)
             pb_ok = st.pair_busy[ws_bv, wd_bv] <= t
             wl_ok &= ~out_is_wl | (whole & pb_ok)
             uid = psrc_c * 65536 + pidx_c
             fail_bv = _crc_fail(ss.phy_seed, uid, attempt,
-                                ss.wl_perq[ws_bv, wd_bv])        # [B, V]
+                                perq_bv)                         # [B, V]
         elig = active & (occ > 0) & wl_ok & hold_ok \
             & (out_is_ej | ((out_vc >= 0) & (space > 0) & link_free))
         # multi-channel ejection: memory stacks sink `b_ej_ways` flits/cycle
@@ -616,10 +695,18 @@ def make_step(B: int, Wout: int, RXW: int = 1, mem_on: bool = False,
             wl_pkts = st.wl_pkts \
                 + post * (tail & out_is_wl).sum().astype(i32)
             pkts_dropped = st.pkts_dropped + post * drop.sum().astype(i32)
+            # a drop's ejection(s) will never happen: count the lost
+            # payload (once per member copy for multicast, mirroring
+            # wl_rx_flits) so metrics can flag the trace incomplete
+            member_cnt = jnp.where(is_mc2, member2.sum(axis=-1), 1) \
+                .astype(i32)
+            wl_drop_flits = st.wl_drop_flits + post * jnp.where(
+                drop, plen_bv * member_cnt, 0).sum().astype(i32)
         else:
             tail = fwd & (sent >= plen_bv)
             wl_nacks, wl_pkts = st.wl_nacks, st.wl_pkts
             pkts_dropped = st.pkts_dropped
+            wl_drop_flits = st.wl_drop_flits
         ej = fwd & out_is_ej
         nej = fwd & ~out_is_ej
 
@@ -636,6 +723,15 @@ def make_step(B: int, Wout: int, RXW: int = 1, mem_on: bool = False,
         phv = ss.phases[psrc_c, pidx_c]                          # [B, V]
         phase_del = st.phase_del \
             + (tail_ej & (phv == st.cur_phase)).sum().astype(i32)
+        if phy_on:
+            # ARQ-exhaustion drop: the ejection(s) this packet owed the
+            # open phase will never happen — credit them now (one per
+            # member copy for multicast, matching the trace table's
+            # per-member phase_need) so a lossy trace closes its
+            # barriers and drains instead of wedging forever (ISSUE 6)
+            phase_del = phase_del + jnp.where(
+                drop & (phv == st.cur_phase), member_cnt, 0) \
+                .sum().astype(i32)
         parr = jnp.arange(P, dtype=i32)
         phase_flits = st.phase_flits + jnp.where(
             parr == st.cur_phase, ej.sum().astype(i32), 0)
@@ -743,7 +839,15 @@ def make_step(B: int, Wout: int, RXW: int = 1, mem_on: bool = False,
         is_mc2_f = is_mc2.reshape(-1)
         ident_mc = (mc_src >= 0) & is_mc2_f[svm] & ss.b_is_rx[:, None] \
             & (mc_id >= 0) & (mc_id.reshape(-1)[svm] == mc_id)
-        inc_mc = ident_mc & fwd.reshape(-1)[svm]                 # [B, V]
+        inc_any_mc = ident_mc & fwd.reshape(-1)[svm]             # [B, V]
+        if phy_on:
+            # broadcast ARQ: a failing group attempt occupies the channel
+            # and the member receivers but delivers to none of them
+            # (all-or-nothing — the shared hash fails every member at
+            # once); the fan-out below uses the delivery-gated mask
+            inc_mc = ident_mc & nej_del.reshape(-1)[svm]
+        else:
+            inc_mc = inc_any_mc
         d_in_mc = jnp.clip(lat_t.reshape(-1)[svm] - 1, 0, DMAX - 1)
         pipe = pipe + (inc_mc[:, :, None]
                        & (jnp.arange(DMAX) == d_in_mc[:, :, None])
@@ -753,7 +857,7 @@ def make_step(B: int, Wout: int, RXW: int = 1, mem_on: bool = False,
                          out_buf, B).reshape(-1)
         busy_until = st.busy_until.at[bu_t].set(
             (t + serv_t).reshape(-1), mode="drop")
-        ser_mc = inc_mc & ss.wl_rx_busy
+        ser_mc = inc_any_mc & ss.wl_rx_busy
         serv_mc = serv_t.reshape(-1)[svm]
         busy_until = jnp.where(
             ser_mc.any(axis=1),
@@ -774,12 +878,20 @@ def make_step(B: int, Wout: int, RXW: int = 1, mem_on: bool = False,
         wl_rx_flits = st.wl_rx_flits + post * (
             (nej_del & ~is_mc2 & out_is_wl).sum() + inc_mc.sum()).astype(i32)
         # the feeding group's tail has been sent: detach the copies
+        # (ARQ-dropped groups detach below, with their member copies
+        # freed alongside the sender)
         mc_src = jnp.where(ident_mc & tail.reshape(-1)[svm], -1, mc_src)
 
+        mem_drop_reads = st.mem_drop_reads
+        wl_rate_flits = st.wl_rate_flits
+        wl_rate_fail = st.wl_rate_fail
         if phy_on:
             # per-(src, dst) WI pacing + energy counters, scatter style:
             # at most one air transmission per pair per cycle, so the
-            # scatters are conflict-free
+            # scatters are conflict-free.  A multicast sender is one slot
+            # with wd_bv = its anchor, so the air/pair accounting lands
+            # on the routed (sender, anchor) pair once — matching the
+            # gather engine's own-column anchor mask.
             ws_col = jnp.broadcast_to(
                 jnp.clip(ss.b_wi, 0, WMAX - 1)[:, None], (B, V))
             pw_s = jnp.where(is_wl_fwd, ws_col, WMAX).reshape(-1)
@@ -792,6 +904,20 @@ def make_step(B: int, Wout: int, RXW: int = 1, mem_on: bool = False,
                               WMAX).reshape(-1)
             wl_fail_flits = st.wl_fail_flits.at[pw_sf, pw_d].add(
                 post, mode="drop")
+            if living:
+                # per-rate-entry attempt counters: when the pair's entry
+                # moves mid-run the per-pair counters no longer identify
+                # a single rate, so metrics needs the exact [R] split
+                # (attributed to the anchor pair's current entry)
+                Rr = st.wl_rate_flits.shape[0]
+                rt_bv = st.wl_rate_d[ws_col, wd_bv]              # [B, V]
+                rt_t = jnp.where(is_wl_fwd, rt_bv, Rr).reshape(-1)
+                wl_rate_flits = wl_rate_flits.at[rt_t].add(
+                    post, mode="drop")
+                rt_tf = jnp.where(is_wl_fwd & fail_bv, rt_bv,
+                                  Rr).reshape(-1)
+                wl_rate_fail = wl_rate_fail.at[rt_tf].add(
+                    post, mode="drop")
             if mem_on:
                 # ARQ drop of a memory request/reply: credit the
                 # requester's window and tombstone a dropped request's
@@ -814,10 +940,19 @@ def make_step(B: int, Wout: int, RXW: int = 1, mem_on: bool = False,
                 rs_d = jnp.clip(ss.reply_slot[psrc_c, pidx_c],
                                 0, Kk2 - 1).reshape(-1)
                 dead = dead.at[rr_d, rs_d].set(True, mode="drop")
-            # a dropped packet frees the receiver VC its claim held
-            db_t = jnp.where(drop, out_buf, B).reshape(-1)
+                # lost read round trips: a dropped read request or read
+                # reply means the requester never sees its data
+                mem_drop_reads = mem_drop_reads + post * (
+                    drop & ((op_bv == 1) | (op_bv == 3))).sum().astype(i32)
+            # a dropped packet frees the receiver VC its claim held —
+            # unicast via the (out_buf, out_vc) scatter; a dropped
+            # multicast group frees EVERY member copy it installed (the
+            # sender's out_vc is the "granted" sentinel, not a VC)
+            db_t = jnp.where(drop & ~is_mc2, out_buf, B).reshape(-1)
             rx_dropped = jnp.zeros((B, V), bool).at[
                 db_t, ovc_c.reshape(-1)].set(True, mode="drop")
+            rx_dropped = rx_dropped | (ident_mc & drop.reshape(-1)[svm])
+            mc_src = jnp.where(rx_dropped, -1, mc_src)
             freed = tail | drop | rx_dropped
         else:
             pair_busy = st.pair_busy
@@ -943,28 +1078,37 @@ def make_step(B: int, Wout: int, RXW: int = 1, mem_on: bool = False,
             awake_cycles=awake_cycles, sleep_cycles=sleep_cycles,
             wl_pair_flits=wl_pair_flits, wl_fail_flits=wl_fail_flits,
             wl_pkts=wl_pkts, wl_nacks=wl_nacks, pkts_dropped=pkts_dropped,
+            wl_drop_flits=wl_drop_flits, mem_drop_reads=mem_drop_reads,
+            wl_serv_d=st.wl_serv_d, wl_perq_d=st.wl_perq_d,
+            wl_rate_d=st.wl_rate_d, wl_resel=st.wl_resel,
+            wl_rate_flits=wl_rate_flits, wl_rate_fail=wl_rate_fail,
             cycles_run=st.cycles_run, drain_cycle=st.drain_cycle,
         )
 
     return step
 
 
-@functools.partial(jax.jit, static_argnums=(2, 3, 4, 5, 6),
+@functools.partial(jax.jit, static_argnums=(2, 3, 4, 5, 6, 7, 8),
                    donate_argnums=(1,))
 def _run(ss: SimStatic, st: SimState, B: int, Wout: int, RXW: int = 1,
-         mem_on: bool = False, phy_on: bool = False) -> SimState:
+         mem_on: bool = False, phy_on: bool = False,
+         drift_on: bool = False, reselect: bool = False) -> SimState:
     """Drain-aware chunked driver (shared with simulator.py; ISSUE 5)."""
-    return chunked.run_chunked(make_step(B, Wout, RXW, mem_on, phy_on),
-                               ss, st, mem_on)
+    wfn = make_window_fn(ss, drift_on, reselect) \
+        if (drift_on or reselect) else None
+    return chunked.run_chunked(
+        make_step(B, Wout, RXW, mem_on, phy_on, drift_on, reselect),
+        ss, st, mem_on, window_fn=wfn)
 
 
-@functools.partial(jax.jit, static_argnums=(2, 3, 4, 5, 6, 7))
+@functools.partial(jax.jit, static_argnums=(2, 3, 4, 5, 6, 7, 8, 9))
 def _run_mono(ss: SimStatic, st: SimState, cycles: int, B: int,
               Wout: int, RXW: int = 1, mem_on: bool = False,
-              phy_on: bool = False) -> SimState:
+              phy_on: bool = False, drift_on: bool = False,
+              reselect: bool = False) -> SimState:
     """Monolithic fixed-length scan (the pre-ISSUE-5 driver), kept as a
     differential oracle for ``tests/test_chunked_exec.py``."""
-    step = make_step(B, Wout, RXW, mem_on, phy_on)
+    step = make_step(B, Wout, RXW, mem_on, phy_on, drift_on, reselect)
 
     def body(carry, t):
         return step(ss, carry, t), None
@@ -995,6 +1139,8 @@ class PackedSim:
     Y: int = 1
     BK: int = 1
     phy_on: bool = False
+    drift_on: bool = False    # living channel: SNR aging walk compiled in
+    reselect: bool = False    # living channel: in-scan rate re-selection
     phy_link: object = None
 
 
@@ -1086,6 +1232,11 @@ def pack(topo: Topology, rt: RoutingTables, tt: TrafficTable,
     # pack identical link state (see phy.rates.pack_link_state)
     pli, phy_on, rx_hold = pack_link_state(
         topo, phy, tt, phy_spec, b_dst, b_depth, b_epb, rx0)
+    # living channel (ISSUE 6): SNR drift and/or in-scan rate
+    # re-selection — static flags, part of the compiled program
+    drift_on = bool(phy_on and phy_spec.drift_amp_db > 0.0)
+    reselect = bool(phy_on and phy_spec.reselect)
+    living = drift_on or reselect
 
     # routing lookup tables
     next_out = np.full((S, S), 0, np.int32)
@@ -1216,24 +1367,46 @@ def pack(topo: Topology, rt: RoutingTables, tt: TrafficTable,
         max_retx=jnp.int32(phy_spec.max_retx if phy_on else 1),
         phy_seed=jnp.uint32(phy_spec.seed if phy_on else 0),
         ctrl_flits=jnp.int32(phy.ctrl_packet_flits),
+        wl_rate0=jnp.asarray(pli.rate_idx if living
+                             else np.zeros((1, 1), np.int32)),
+        wl_snr=jnp.asarray(pli.snr_pad if living
+                           else np.zeros((1, 1), np.float32)),
+        wl_serv_r=jnp.asarray(pli.serv_r if living
+                              else np.ones(1, np.int32)),
+        wl_perq_r=jnp.asarray(pli.perq_r if living
+                              else np.zeros((1, 1, 1), np.int32)),
+        wl_gp_q=jnp.asarray(pli.gp_q if living
+                            else np.zeros((1, 1, 1), np.int32)),
+        wl_gain_r=jnp.asarray(pli.gain_r if living
+                              else np.ones(1, np.float32)),
+        wl_gbps_r=jnp.asarray(pli.gbps_r if living
+                              else np.ones(1, np.float32)),
+        wl_pkt_bits=jnp.float32(phy.pkt_flits * phy.flit_bits),
+        wl_drift_amp=jnp.float32(phy_spec.drift_amp_db if phy_on else 0.0),
+        wl_drift_period=jnp.int32(max(1, phy_spec.drift_period)
+                                  if phy_on else 1),
     )
     return PackedSim(ss=ss, B=B, Wout=Wout, n_cores=topo.n_cores, Lw=Lw,
                      n_inj=n_inj, topo=topo, rt=rt, phy=phy, sim=sim,
                      RXW=RXW, mem_on=mem_on, Y=Y, BK=BK, phy_on=phy_on,
-                     phy_link=pli)
+                     drift_on=drift_on, reselect=reselect, phy_link=pli)
 
 
 def run(ps: PackedSim, cycles: int | None = None,
         driver: str = "chunked") -> SimState:
     N, K = ps.ss.births.shape
+    living = ps.drift_on or ps.reselect
+    R = int(ps.ss.wl_serv_r.shape[0])
     st = init_state(ps.B, int(N), int(ps.ss.phase_need.shape[0]),
                     int(K), ps.Y, ps.BK, mem_on=ps.mem_on,
-                    phy_on=ps.phy_on)
+                    phy_on=ps.phy_on, living=living, R=R)
     if driver == "monolithic":
         return jax.block_until_ready(
             _run_mono(ps.ss, st, int(cycles or ps.sim.cycles), ps.B,
-                      ps.Wout, ps.RXW, ps.mem_on, ps.phy_on))
+                      ps.Wout, ps.RXW, ps.mem_on, ps.phy_on,
+                      ps.drift_on, ps.reselect))
     ss = ps.ss if cycles is None else ps.ss._replace(
         cycles=jnp.int32(cycles))
     return jax.block_until_ready(
-        _run(ss, st, ps.B, ps.Wout, ps.RXW, ps.mem_on, ps.phy_on))
+        _run(ss, st, ps.B, ps.Wout, ps.RXW, ps.mem_on, ps.phy_on,
+             ps.drift_on, ps.reselect))

@@ -125,7 +125,12 @@ def _build_point(p: SweepPoint):
         + (f"/{p.app}" if p.app else "") \
         + ("/closed" if p.closed_loop else "") \
         + (f"/phy:{p.phy_spec.policy}@{p.phy_spec.link_budget_db}dB"
-           if p.phy_spec is not None else "")
+           if p.phy_spec is not None else "") \
+        + (f"/drift={p.phy_spec.drift_amp_db}dB"
+           if p.phy_spec is not None and p.phy_spec.drift_amp_db > 0
+           else "") \
+        + ("/resel" if p.phy_spec is not None and p.phy_spec.reselect
+           else "")
     return topo, rt, tt, label
 
 

@@ -20,23 +20,35 @@ mm-wave links (Timoneda et al. 2018/2019):
   draw per (seed, packet, attempt) against the link's packet-error
   threshold, and the host-side reference that predicts per-packet
   attempt counts / drops exactly.
+- ``phy.living`` (ISSUE 6): the in-scan dynamic-channel updates — a
+  seeded per-link SNR drift walk (thermal aging of the package) and
+  per-window rate re-selection, applied by both engines at scan-window
+  boundaries.  ``PhySweepSpec.drift_amp_db`` / ``reselect`` switch it
+  on; with both off the point runs the exact static one-shot program.
 
 ``link_tables`` is the packing entry point: both engines' ``pack``
 functions call it with the topology and a ``PhySweepSpec`` and receive
 the padded per-pair service/PER/energy tables (``PhyLinkInfo``) they
-embed.  The whole path is compiled only under a static ``phy_on`` flag;
+embed.  Multicast tables run broadcast ARQ over the same path: the
+shared hash draw gives per-member CRC outcomes, and a group
+retransmission is triggered exactly when its worst member fails
+(ISSUE 6 — the old "multicast tables rejected" caveat is gone).  The
+whole path is compiled only under a static ``phy_on`` flag;
 ``phy_spec=None`` (or a fabric without WIs) runs the exact pre-PHY
 program, byte for byte.
 """
 from repro.phy.channel import (ChannelParams, PhySweepSpec, link_distances,
-                               link_snr_db, shadowing_db)
-from repro.phy.rates import (DEFAULT_RATE_TABLE, RateEntry, link_tables,
-                             oracle_fixed_rate, select_rates, PhyLinkInfo)
+                               link_snr_db, shadowing_db, spec_is_living)
+from repro.phy.living import drift_unit, make_window_fn, window_tables
+from repro.phy.rates import (DEFAULT_RATE_TABLE, GP_SCALE, RateEntry,
+                             goodput_q, link_tables, oracle_fixed_rate,
+                             select_rates, PhyLinkInfo)
 from repro.phy.retx import crc_fail, crc_hash, reference_attempts
 
 __all__ = [
     "ChannelParams", "PhySweepSpec", "link_distances", "link_snr_db",
-    "shadowing_db", "DEFAULT_RATE_TABLE", "RateEntry", "PhyLinkInfo",
-    "link_tables", "oracle_fixed_rate", "select_rates",
-    "crc_fail", "crc_hash", "reference_attempts",
+    "shadowing_db", "spec_is_living", "DEFAULT_RATE_TABLE", "GP_SCALE",
+    "RateEntry", "PhyLinkInfo", "goodput_q", "link_tables",
+    "oracle_fixed_rate", "select_rates", "drift_unit", "make_window_fn",
+    "window_tables", "crc_fail", "crc_hash", "reference_attempts",
 ]

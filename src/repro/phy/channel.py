@@ -68,6 +68,16 @@ class PhySweepSpec:
     ``link_budget_db`` is the channel-quality knob (see module
     docstring); ``max_retx`` bounds ARQ attempts per packet — a packet
     failing CRC ``max_retx`` times is dropped and counted.
+
+    ``drift_amp_db`` / ``drift_period`` / ``reselect`` make the channel
+    a *living* one (ISSUE 6): a seeded per-link thermal-cycle walk
+    degrades every link's SNR by up to ``drift_amp_db`` dB, updated once
+    per ``core.chunked.CHUNK_CYCLES`` scan window and interpolated
+    between knots ``drift_period`` windows apart (``phy.living``).
+    ``reselect`` moves rate selection into the scan: at every window
+    boundary each link re-picks its 16/8/4 Gbps entry from the current
+    expected-goodput estimate.  With ``drift_amp_db == 0`` and
+    ``reselect`` off the point runs the exact one-shot static program.
     """
 
     link_budget_db: float = 18.0
@@ -75,6 +85,14 @@ class PhySweepSpec:
     max_retx: int = 4
     seed: int = 0
     channel: ChannelParams = ChannelParams()
+    drift_amp_db: float = 0.0    # peak SNR degradation of the aging walk
+    drift_period: int = 8        # windows between drift knots
+    reselect: bool = False       # in-scan per-window rate re-selection
+
+
+def spec_is_living(spec: "PhySweepSpec | None") -> bool:
+    """True iff the point needs the in-scan dynamic-channel path."""
+    return spec is not None and (spec.drift_amp_db > 0.0 or spec.reselect)
 
 
 def link_distances(topo: Topology) -> np.ndarray:

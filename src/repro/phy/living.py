@@ -1,0 +1,148 @@
+"""In-scan living-channel updates: SNR drift and rate re-selection.
+
+The static PHY of ISSUE 4 froze the channel at pack time: one SNR map,
+one host-side rate-selection pass, constant per-pair PER/service tables
+for the whole run.  Real in-package links age — thermal cycling of the
+package changes the standing-wave pattern of the cavity and with it
+every link's effective SNR ("Engineer the Channel and Adapt to it",
+Timoneda et al. 2019).  This module is the *single* implementation both
+engines call at scan-window boundaries (``core.chunked.CHUNK_CYCLES``);
+like ``rates.pack_link_state`` it is shared on purpose — the dual-engine
+invariant pins the two step *formulations*, and a pure elementwise
+window function cannot be formulated twice without inviting drift.
+
+- ``drift_unit``: the seeded thermal-cycle walk.  One knot per
+  ``drift_period`` windows per unordered link (the channel is
+  reciprocal), drawn from the same counter-based murmur3 hash the ARQ
+  CRC uses — no RNG state in the carry — and linearly interpolated
+  between knots.  Values lie in ``[0, 1)``; the sweep knob
+  ``drift_amp_db`` scales them, so drifted SNR is *monotone
+  non-increasing in the aging amplitude* by construction (the property
+  tests pin this).
+- ``window_tables``: per-window PER thresholds, goodput estimates and
+  (under ``reselect``) the per-link argmax over the rate table.  On a
+  static channel (``drift_amp_db == 0``) it reads the host-packed
+  integer tables ``wl_perq_r`` / ``wl_gp_q`` — the *same* integers the
+  host selection pass argmaxed over — so in-scan re-selection is a
+  bitwise no-op vs the one-shot program.  Under drift the engines
+  recompute both in f32 on device; the two engines share this code, so
+  they agree bitwise by construction and the differential tests keep
+  pinning the surrounding step dynamics.
+- ``make_window_fn``: closes over the static flags and returns the
+  ``window_fn(st, t)`` the step (via ``lax.cond`` on the window
+  boundary) and the drain-aware driver (boundary replay after early
+  exit, ``core.chunked.run_chunked``) both apply.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.chunked import CHUNK_CYCLES
+from repro.core.constants import WMAX
+from repro.phy.rates import GP_SCALE, PER_Q
+from repro.phy.retx import crc_hash
+
+# Domain-separation constant: the drift walk and the CRC draw share the
+# packed ``phy_seed`` but must be independent streams.
+DRIFT_SEED = 0xD51F7EED
+
+
+def drift_unit(phy_seed, win, period):
+    """[WMAX, WMAX] f32 aging offsets in ``[0, 1)`` for scan window ``win``.
+
+    Symmetric (one walk per unordered link, mirrored — the physical
+    channel is reciprocal) and deterministic in ``(phy_seed, win,
+    period)``.  Knots sit every ``period`` windows; between knots the
+    offset is the exact linear interpolation, so the walk is slow on the
+    scale of a scan window, as thermal cycling is.  The hash's top 24
+    bits become the f32 mantissa — exact, no rounding ties.
+    """
+    i32, f32 = jnp.int32, jnp.float32
+    ids = jnp.arange(WMAX, dtype=i32)
+    lid = (jnp.minimum(ids[:, None], ids[None, :]) * WMAX
+           + jnp.maximum(ids[:, None], ids[None, :]))
+    dseed = jnp.uint32(phy_seed) ^ jnp.uint32(DRIFT_SEED)
+    k = (win // period).astype(i32)
+    frac = (win % period).astype(f32) / f32(period)
+
+    def knot(kk):
+        return (crc_hash(dseed, lid, kk) >> jnp.uint32(8)
+                ).astype(f32) * f32(1.0 / (1 << 24))
+
+    h0, h1 = knot(k), knot(k + 1)
+    return h0 + (h1 - h0) * frac
+
+
+def window_tables(ss, rate_prev, win, drift_on: bool, reselect: bool):
+    """Per-window ``(rate, serv, perq)`` [WMAX, WMAX] int32 tables.
+
+    ``ss`` is either engine's ``SimStatic`` (the fields read here are
+    shared by construction); ``rate_prev`` is the carry's current
+    per-link rate-table entry.  Static python flags pick the program:
+
+    - ``drift_on``: recompute PER thresholds and quantized goodput from
+      the drifted SNR (f32 transcendentals, identical in both engines);
+      otherwise read the host-packed integer tables — bitwise the
+      integers ``rates.select_rates`` argmaxed over.
+    - ``reselect``: per-link argmax over the quantized goodput (first
+      maximum — ties break toward the faster entry, exactly like the
+      host pass); otherwise keep ``rate_prev`` (the channel still
+      drifts under the *static* selection — the fig9 "adaptive-static"
+      arm).
+    """
+    i32, f32 = jnp.int32, jnp.float32
+    if drift_on:
+        u = drift_unit(ss.phy_seed, win, ss.wl_drift_period)
+        snr = ss.wl_snr - ss.wl_drift_amp * u
+        gamma = jnp.power(f32(10.0), snr[None] / 10.0) \
+            * ss.wl_gain_r[:, None, None]
+        ber = f32(0.5) * jnp.exp(-gamma / 2)
+        per = -jnp.expm1(ss.wl_pkt_bits
+                         * jnp.log1p(-jnp.minimum(ber, f32(0.999999))))
+        perq_r = jnp.minimum(jnp.ceil(per * f32(1 << PER_Q)),
+                             f32((1 << PER_Q) - 1)).astype(i32)
+        gp_q = jnp.rint(ss.wl_gbps_r[:, None, None] * (1 - per)
+                        * f32(GP_SCALE)).astype(i32)
+    else:
+        perq_r, gp_q = ss.wl_perq_r, ss.wl_gp_q
+    if reselect:
+        rate = jnp.argmax(gp_q, axis=0).astype(i32)
+    else:
+        rate = rate_prev
+    perq = jnp.take_along_axis(perq_r, rate[None], axis=0)[0]
+    serv = ss.wl_serv_r[rate]
+    return rate, serv, perq
+
+
+def make_window_fn(ss, drift_on: bool, reselect: bool):
+    """Window-boundary update ``window_fn(st, t) -> st`` for one engine.
+
+    Fires at every ``t % CHUNK_CYCLES == 0`` — the window cadence is
+    that fixed constant regardless of the driver's execution chunk, so
+    chunked runs with any chunk size and the monolithic oracle agree on
+    when the channel moves.  Refreshes the carry's dynamic link tables
+    (``wl_serv_d`` / ``wl_perq_d`` / ``wl_rate_d``) for the window
+    containing cycle ``t`` and counts re-selections (``wl_resel``) over
+    the valid off-diagonal links.  At window 0 the previous rate is the
+    host selection (``ss.wl_rate0``) — the zero-initialized carry is
+    never read.  A pure function of the window index — the drain-aware
+    driver replays the remaining boundaries after an early exit, so
+    chunked and monolithic execution stay bitwise-equal.
+    """
+    i32 = jnp.int32
+
+    ids = jnp.arange(WMAX, dtype=i32)
+
+    def fn(st, t):
+        win = (t // jnp.int32(CHUNK_CYCLES)).astype(i32)
+        prev = jnp.where(win == 0, ss.wl_rate0, st.wl_rate_d)
+        rate, serv, perq = window_tables(ss, prev, win, drift_on, reselect)
+        valid = ids < ss.n_wi
+        live = valid[:, None] & valid[None, :] \
+            & (ids[:, None] != ids[None, :])
+        changed = live & (rate != prev)
+        return st._replace(
+            wl_rate_d=rate, wl_serv_d=serv, wl_perq_d=perq,
+            wl_resel=st.wl_resel + changed.astype(i32).sum())
+
+    return fn

@@ -7,21 +7,28 @@ flit serialization time (``serv_scale`` — the engines' per-link
 ``wireless_flit_cycles``), and (c) doubles the energy per bit at fixed
 TX power (``epb_scale``).
 
-Rate selection is *static per link* — the "engineer the channel and
-adapt to it" policy (Timoneda et al. 2019): the channel inside a sealed
-package does not fade over time, so per-link rates are picked once from
-the measured SNR map.  ``select_rates`` walks the table fastest-first
-and keeps the fastest entry whose expected goodput (rate derated by the
-expected ARQ attempts, ``rate * (1 - PER)``) is at least the next,
-slower entry's — i.e. it stops exactly when slowing down would stop
-paying.  ``oracle_fixed_rate`` is the strongest *non-adaptive* baseline:
-the single table entry maximizing total expected goodput over every
-used link.
+Rate selection is per link — the "engineer the channel and adapt to it"
+policy (Timoneda et al. 2019).  ``select_rates`` walks the table
+fastest-first and keeps the fastest entry whose expected goodput (rate
+derated by the expected ARQ attempts, ``rate * (1 - PER)``) is at least
+the next, slower entry's — i.e. it stops exactly when slowing down
+would stop paying.  The argmax runs over *integer-quantized* goodput
+(``goodput_q``, ``GP_SCALE`` steps of a Gbps): those are exactly the
+integers the engines embed for in-scan re-selection on a living channel
+(``phy.living``), so the one-shot host pass and the per-window device
+pass agree bitwise on a static channel.  ``oracle_fixed_rate`` is the
+strongest *non-adaptive* baseline: the single table entry maximizing
+total expected goodput over every used link.
 
 ``link_tables`` packages the result for the engines: padded
 ``[WMAX, WMAX]`` per-pair tables of flit service cycles, quantized
 packet-error thresholds (16-bit, compared against the CRC hash of
-``phy.retx``) and energy per bit.
+``phy.retx``) and energy per bit, plus the per-entry ``[R, ...]``
+tables (service cycles, PER thresholds, quantized goodput, SNR gains)
+the living-channel window updates re-derive rates from.  Multicast
+tables are fully supported since ISSUE 6: the engines run broadcast ARQ
+(per-member CRC outcomes, worst-link group retransmission) over the
+same per-pair tables.
 """
 from __future__ import annotations
 
@@ -35,6 +42,7 @@ from repro.phy.channel import (PhySweepSpec, ber_from_snr, link_snr_db,
                                per_packet)
 
 PER_Q = 16                    # PER quantization: threshold in [0, 2^16]
+GP_SCALE = 1 << 20            # goodput quantization: int steps per 2^-20 Gbps
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,6 +82,14 @@ class PhyLinkInfo:
     per: np.ndarray         # [WMAX, WMAX] float exact packet error rate
     epb: np.ndarray         # [WMAX, WMAX] float pJ/bit on that link
     snr_db: np.ndarray      # [n_wi, n_wi] float
+    # per-entry tables for the living-channel window updates (phy.living)
+    serv_r: np.ndarray      # [R] int32 flit cycles of each table entry
+    epb_r: np.ndarray       # [R] float pJ/bit of each table entry
+    gain_r: np.ndarray      # [R] float32 processing gain of each entry
+    gbps_r: np.ndarray      # [R] float32 line rate of each entry
+    perq_r: np.ndarray      # [R, WMAX, WMAX] int32 PER threshold per entry
+    gp_q: np.ndarray        # [R, WMAX, WMAX] int32 quantized goodput
+    snr_pad: np.ndarray     # [WMAX, WMAX] float32 padded SNR map
 
 
 def rate_per_matrix(snr_db: np.ndarray, packet_bits: int,
@@ -95,22 +111,34 @@ def expected_goodput(per_r: np.ndarray, table=DEFAULT_RATE_TABLE
     return rates[:, None, None] * (1.0 - per_r)
 
 
+def goodput_q(per_r: np.ndarray, table=DEFAULT_RATE_TABLE) -> np.ndarray:
+    """[R, W, W] int32 expected goodput in ``1 / GP_SCALE`` Gbps steps.
+
+    The integer form the selection argmax runs over — and the exact
+    integers the engines embed (``wl_gp_q``) so the in-scan re-selection
+    of a living channel (``phy.living.window_tables``) reproduces the
+    host pass bitwise when the channel is static.
+    """
+    return np.rint(expected_goodput(per_r, table) * GP_SCALE
+                   ).astype(np.int32)
+
+
 def select_rates(per_r: np.ndarray, table=DEFAULT_RATE_TABLE) -> np.ndarray:
     """[W, W] adaptive per-link entry: fastest rate worth keeping.
 
     The expected-goodput argmax per link (ties break toward the faster
-    entry).  In the physical regime — PER monotone in robustness, so
-    goodput is unimodal across the table — this is exactly the
-    fastest-first walk that stops at the first rate whose expected
-    retransmissions no longer justify abandoning ("engineer the channel
-    and adapt to it"); the argmax form also handles the degenerate
-    saturated-PER links (every rate ~dead) where the walk's local
-    comparison is uninformative.
+    entry), over the quantized integer goodput of ``goodput_q`` — see
+    there for why integers.  In the physical regime — PER monotone in
+    robustness, so goodput is unimodal across the table — this is
+    exactly the fastest-first walk that stops at the first rate whose
+    expected retransmissions no longer justify abandoning ("engineer
+    the channel and adapt to it"); the argmax form also handles the
+    degenerate saturated-PER links (every rate ~dead) where the walk's
+    local comparison is uninformative.
     """
-    gp = expected_goodput(per_r, table)
     # np.argmax returns the first maximum: equal goodputs pick the
     # faster entry
-    return np.argmax(gp, axis=0).astype(np.int32)
+    return np.argmax(goodput_q(per_r, table), axis=0).astype(np.int32)
 
 
 def oracle_fixed_rate(per_r: np.ndarray, used: np.ndarray,
@@ -136,10 +164,6 @@ def pack_link_state(topo: Topology, phy: PhyParams, tt, phy_spec,
     pli = link_tables(topo, phy, phy_spec)
     phy_on = pli is not None
     n_mc = getattr(tt, "n_mc", 0)
-    if phy_on and n_mc:
-        raise ValueError(
-            "lossy PHY does not support multicast tables yet — per-member "
-            "CRC outcomes for broadcast ARQ are future work")
     deep = max(phy.pkt_flits,
                int(tt.lens.max()) if getattr(tt, "lens", None) is not None
                else 0)
@@ -191,24 +215,39 @@ def link_tables(topo: Topology, phy: PhyParams,
     else:
         raise ValueError(f"unknown PHY rate policy {pol!r}")
 
+    R = len(table)
     rate_idx = np.zeros((WMAX, WMAX), np.int32)
     serv = np.ones((WMAX, WMAX), np.int32)
     perq = np.zeros((WMAX, WMAX), np.int32)
     per = np.zeros((WMAX, WMAX), np.float64)
     epb = np.zeros((WMAX, WMAX), np.float64)
+    perq_r = np.zeros((R, WMAX, WMAX), np.int32)
+    gp_q = np.zeros((R, WMAX, WMAX), np.int32)
+    snr_pad = np.zeros((WMAX, WMAX), np.float32)
     ii, jj = np.meshgrid(np.arange(n_wi), np.arange(n_wi), indexing="ij")
     per_sel = per_r[idx, ii, jj]
     rate_idx[:n_wi, :n_wi] = idx
-    serv[:n_wi, :n_wi] = phy.wireless_flit_cycles * np.asarray(
-        [table[i].serv_scale for i in range(len(table))], np.int32)[idx]
+    serv_r = phy.wireless_flit_cycles * np.asarray(
+        [e.serv_scale for e in table], np.int32)
+    serv[:n_wi, :n_wi] = serv_r[idx]
     # quantize PER onto the 16-bit CRC-hash range; ceil so a nonzero PER
     # never rounds to "lossless"
-    perq[:n_wi, :n_wi] = np.minimum(
-        np.ceil(per_sel * float(1 << PER_Q)), float((1 << PER_Q) - 1)
+    perq_r[:, :n_wi, :n_wi] = np.minimum(
+        np.ceil(per_r * float(1 << PER_Q)), float((1 << PER_Q) - 1)
     ).astype(np.int32)
+    perq[:n_wi, :n_wi] = perq_r[idx, ii, jj]
     per[:n_wi, :n_wi] = per_sel
-    epb[:n_wi, :n_wi] = phy.e_wireless_pj_bit * np.asarray(
-        [table[i].epb_scale for i in range(len(table))])[idx]
+    epb_r = phy.e_wireless_pj_bit * np.asarray(
+        [e.epb_scale for e in table])
+    epb[:n_wi, :n_wi] = epb_r[idx]
+    gp_q[:, :n_wi, :n_wi] = goodput_q(per_r, table)
+    snr_pad[:n_wi, :n_wi] = snr
     return PhyLinkInfo(spec=spec, table=tuple(table), n_wi=n_wi,
                        rate_idx=rate_idx, serv=serv, perq=perq, per=per,
-                       epb=epb, snr_db=snr)
+                       epb=epb, snr_db=snr,
+                       serv_r=serv_r, epb_r=epb_r,
+                       gain_r=np.asarray([e.gain for e in table],
+                                         np.float32),
+                       gbps_r=np.asarray([e.gbps for e in table],
+                                         np.float32),
+                       perq_r=perq_r, gp_q=gp_q, snr_pad=snr_pad)

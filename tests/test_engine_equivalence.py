@@ -215,3 +215,55 @@ def test_engines_equivalent_closed_loop_variants(case):
             sim = SimParams(cycles=600, warmup=0, mac=MacMode.TOKEN)
     rt = compute_routing(topo)
     _compare(topo, rt, _closed_loop_table(topo, sim.cycles, phy), phy, sim)
+
+
+def test_engines_equivalent_broadcast_arq():
+    """ISSUE 6 acceptance: multicast over the lossy channel — group
+    serv/PER anchored on the worst member link, worst-link group
+    retransmission, all-or-nothing delivery and ARQ-exhaustion phase
+    credit — stays bitwise-equal across both formulations."""
+    topo = build_xcym(4, 4, Fabric.WIRELESS)
+    rt = compute_routing(topo)
+    sim = SimParams(cycles=900, warmup=0)
+    tt = traffic.from_trace(topo, _MC_TRACE, DEFAULT_PHY.pkt_flits)
+    sn = _compare(topo, rt, tt, DEFAULT_PHY, sim, phy_spec=_lossy_spec())
+    assert int(sn.wl_nacks) > 0       # a group actually retransmitted
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("case", ["token", "8c", "drop-heavy", "living"])
+def test_engines_equivalent_broadcast_arq_variants(case):
+    """Broadcast ARQ across MAC modes / sizes, plus the drop-heavy point
+    (group drops credit the phase barrier once per member) and a living
+    channel (drift + in-scan re-selection at window boundaries)."""
+    from repro.phy import PhySweepSpec
+    phy, sim = DEFAULT_PHY, SimParams(cycles=900, warmup=0)
+    spec = _lossy_spec()
+    topo = build_xcym(8 if case == "8c" else 4, 4, Fabric.WIRELESS)
+    rt = compute_routing(topo)
+    if case == "token":
+        sim = SimParams(cycles=900, warmup=0, mac=MacMode.TOKEN)
+    elif case == "drop-heavy":
+        spec = PhySweepSpec(link_budget_db=13.0, max_retx=2)
+    elif case == "living":
+        spec = PhySweepSpec(link_budget_db=17.0, max_retx=3,
+                            drift_amp_db=4.0, reselect=True)
+    tt = traffic.from_trace(topo, _MC_TRACE, phy.pkt_flits)
+    sn = _compare(topo, rt, tt, phy, sim, phy_spec=spec)
+    if case == "drop-heavy":
+        assert int(sn.pkts_dropped) > 0 and int(sn.wl_drop_flits) > 0
+
+
+@pytest.mark.slow
+def test_engines_equivalent_living_uniform():
+    """Drifting SNR + re-selection under open-loop load: the per-window
+    table refresh and the [R] attempt/fail counters stay bitwise-equal."""
+    from repro.phy import PhySweepSpec
+    topo = build_xcym(4, 4, Fabric.WIRELESS)
+    rt = compute_routing(topo)
+    sim = SimParams(cycles=600, warmup=0)
+    tt = traffic.uniform_random(topo, 0.6, 0.3, sim.cycles, 64, seed=31)
+    spec = PhySweepSpec(link_budget_db=17.0, max_retx=3,
+                        drift_amp_db=4.0, reselect=True)
+    sn = _compare(topo, rt, tt, DEFAULT_PHY, sim, phy_spec=spec)
+    assert int(sn.wl_resel) > 0       # the channel actually moved
